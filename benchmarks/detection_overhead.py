@@ -1,0 +1,55 @@
+"""Beyond-paper: cost of the always-on in-band device channel.
+
+Measures per-step wall time of the jitted train step with the full probe set
+(loss + whole-grad stream + data + router) vs a probe-free variant, on the
+reduced gemma3 config. The paper's black channel idles at one pre-posted recv;
+our device channel idles at one fused reduction — this benchmark quantifies it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core.detect import ProbeConfig
+from repro.launch.train import build_train_setup
+from repro.launch.steps import make_train_step
+from repro.optim import AdamWConfig
+
+
+def _time_steps(step_fn, state, batch, iters=30) -> float:
+    inject = jnp.uint32(0)
+    new_state, m, w = step_fn(state, batch, inject)   # compile + warmup
+    jax.block_until_ready(w)
+    t0 = time.monotonic()
+    for _ in range(iters):
+        new_state, m, w = step_fn(new_state, batch, inject)
+    jax.block_until_ready(w)
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def run(iters=30):
+    cfg = smoke_config("gemma3-1b")
+    model, step_fn, state, pipe, opt_cfg = build_train_setup(
+        cfg, batch_size=4, seq_len=64, total_steps=100)
+    batch = next(pipe)
+
+    with_probes = jax.jit(make_train_step(cfg, AdamWConfig()))
+    us_on = _time_steps(with_probes, state, batch, iters)
+
+    # probe-free variant: same step, word forced to constant
+    base = make_train_step(cfg, AdamWConfig())
+
+    def no_probe(state, batch, inject):
+        new_state, metrics, _ = base(state, batch, inject)
+        return new_state, metrics, jnp.uint32(0)
+
+    us_off = _time_steps(jax.jit(no_probe), state, batch, iters)
+    return [
+        ("detection_on_us_per_step", 0, us_on),
+        ("detection_off_us_per_step", 0, us_off),
+        ("detection_overhead_pct", 0,
+         (us_on - us_off) / max(us_off, 1e-9) * 100.0),
+    ]

@@ -1,0 +1,60 @@
+"""Paper Figure 2 analogue: error-propagation duration vs rank count.
+
+The paper measures (on the root rank) the time to duplicate comm_world,
+propagate an exception from rank 0 to all ranks, and clean up — black channel
+vs ULFM. We reproduce the same experiment on the simulated runtime: all
+non-root ranks are blocked in ``Future.wait`` on a receive that will never be
+matched; rank 0 calls ``signal_error``; the measured span on the root covers
+the full epoch (signal → everyone agreed → (rank, code) table delivered →
+exception raised), plus the communicator setup, exactly like the paper's
+"duplicate + propagate + clean up" protocol.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import pytest
+
+from repro.core import Comm, PropagatedError, initialize, run_ranks
+
+
+def propagation_duration(nranks: int, *, ulfm: bool, reps: int = 5) -> dict:
+    """Median/percentile durations (ms) measured on the root rank."""
+    durations = []
+
+    def fn(ctx):
+        inst = initialize(ctx, default_timeout=60.0)
+        for _ in range(reps):
+            t0 = time.monotonic()
+            comm = Comm(ctx, ctx.dup(ctx.world), default_timeout=60.0)
+            if comm.rank == 0:
+                try:
+                    comm.signal_error(42)
+                except PropagatedError:
+                    pass
+                durations.append((time.monotonic() - t0) * 1e3)
+            else:
+                try:
+                    comm.recv(src=0).wait()
+                except PropagatedError:
+                    pass
+            comm.close()
+        return None
+
+    run_ranks(nranks, fn, ulfm=ulfm, join_timeout=120.0)
+    return {
+        "median_ms": statistics.median(durations),
+        "min_ms": min(durations),
+        "max_ms": max(durations),
+    }
+
+
+def run(ranks=(4, 8, 16, 32, 64), reps=5):
+    rows = []
+    for n in ranks:
+        bc = propagation_duration(n, ulfm=False, reps=reps)
+        ul = propagation_duration(n, ulfm=True, reps=reps)
+        rows.append(("fig2_blackchannel", n, bc["median_ms"] * 1e3))
+        rows.append(("fig2_ulfm", n, ul["median_ms"] * 1e3))
+    return rows

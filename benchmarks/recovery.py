@@ -1,0 +1,71 @@
+"""Recovery-cost comparison: the paper's three use cases, measured.
+
+1. LFLR (in-memory known-good restore)     — use case 1/2 scale
+2. optimizer reset (hierarchical escalate) — use case 2
+3. global rollback (disk checkpoint)       — use case 3
+
+Plus buddy-store push/recover (the peer-redundancy LFLR substrate).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import BuddyStore, Checkpointer
+from repro.configs import smoke_config
+from repro.core.resilient import snapshot
+from repro.launch.steps import make_reset_opt_fn
+from repro.launch.train import build_train_setup
+
+
+def run():
+    cfg = smoke_config("qwen3-1.7b")
+    model, step_fn, state, pipe, _ = build_train_setup(
+        cfg, batch_size=2, seq_len=32, total_steps=10)
+    rows = []
+
+    # LFLR: snapshot + restore (device copy)
+    t0 = time.monotonic()
+    good = snapshot(state)
+    jax.block_until_ready(good)
+    t_snap = (time.monotonic() - t0) * 1e6
+    t0 = time.monotonic()
+    restored = snapshot(good)
+    jax.block_until_ready(restored)
+    t_restore = (time.monotonic() - t0) * 1e6
+    rows += [("lflr_snapshot_us", 0, t_snap), ("lflr_restore_us", 0, t_restore)]
+
+    # optimizer reset
+    reset = make_reset_opt_fn(cfg)
+    t0 = time.monotonic()
+    st = reset(state, jnp.float32(0.5))
+    jax.block_until_ready(st)
+    t_reset = (time.monotonic() - t0) * 1e6
+    rows.append(("optimizer_reset_us", 0, t_reset))
+
+    # global rollback: blocking save + restore from disk
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        t0 = time.monotonic()
+        ck.save(1, state, blocking=True)
+        t_save = (time.monotonic() - t0) * 1e6
+        t0 = time.monotonic()
+        got = ck.restore_latest(like=state)
+        assert got is not None
+        t_roll = (time.monotonic() - t0) * 1e6
+    rows += [("rollback_save_us", 0, t_save), ("rollback_restore_us", 0, t_roll)]
+
+    # buddy store
+    buddies = BuddyStore(8)
+    t0 = time.monotonic()
+    buddies.push(3, 100, state["params"])
+    t_push = (time.monotonic() - t0) * 1e6
+    t0 = time.monotonic()
+    got = buddies.recover(3)
+    assert got is not None
+    t_rec = (time.monotonic() - t0) * 1e6
+    rows += [("buddy_push_us", 0, t_push), ("buddy_recover_us", 0, t_rec)]
+    return rows

@@ -1,0 +1,58 @@
+"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_row(rec: dict) -> str:
+    if rec.get("skipped"):
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | skip | — | — | "
+                f"{rec['skipped']} |")
+    if not rec.get("ok"):
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | FAIL | — | — | "
+                f"{rec.get('error','?')[:60]} |")
+    r = rec["roofline"]
+    mem_gib = rec["memory"]["peak_live_bytes"] / 2**30
+    return ("| {arch} | {shape} | {c:.4f} | {m:.4f} | {k:.4f} | {dom} | "
+            "{ratio:.2f} | {frac:.3f} | {mem:.1f} | |".format(
+                arch=rec["arch"], shape=rec["shape"], c=r["compute_s"],
+                m=r["memory_s"], k=r["collective_s"], dom=r["dominant"][:4],
+                ratio=r["model_flops_ratio"], frac=r["roofline_fraction"],
+                mem=mem_gib))
+
+
+HEADER = ("| arch | shape | compute_s | memory_s | collective_s | dom | "
+          "6ND/HLO | roofline_frac | mem GiB/dev | note |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = [HEADER]
+    for rec in load_records(mesh):
+        rows.append(fmt_row(rec))
+    return "\n".join(rows)
+
+
+def run():
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    rows = []
+    for r in ok:
+        rows.append((f"roofline_bound_s:{r['arch']}:{r['shape']}", 0,
+                     max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                         r["roofline"]["collective_s"])))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,37 @@
+"""Benchmark harness: one experiment per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV:
+  * Table I analogue  -> transport_latency (barrier, plain vs ULFM mode)
+  * Figure 2 analogue -> error_propagation (black channel vs ULFM revoke)
+  * beyond paper      -> detection_overhead (in-band device channel cost)
+  * recovery costs    -> LFLR vs optimizer-reset vs rollback vs buddy store
+  * roofline bounds   -> per-cell dominant-term bound from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (detection_overhead, error_propagation, recovery,
+                   roofline_table, transport_latency)
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("transport_latency", lambda: transport_latency.run(ranks=(2, 4, 8, 16))),
+        ("error_propagation", lambda: error_propagation.run(ranks=(4, 8, 16, 32))),
+        ("detection_overhead", detection_overhead.run),
+        ("recovery", recovery.run),
+        ("roofline", roofline_table.run),
+    ]
+    for name, fn in sections:
+        try:
+            for row_name, derived, us in fn():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}_FAILED,0,0")
+
+
+if __name__ == "__main__":
+    main()

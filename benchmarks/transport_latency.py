@@ -1,0 +1,44 @@
+"""Paper Table I analogue: transport barrier latency.
+
+The paper compares MPI implementations (IntelMPI / OpenMPI / OpenMPI-ULFM) with
+``osu_barrier``. Our runtime substitutes the thread transport for MPI, so the
+comparable measurement is barrier latency vs rank count in plain (MPI-3.0-like)
+and ULFM-enabled modes — the ULFM failure detector adds per-operation liveness
+checks, which is the analogue of the paper's observation that the ULFM stack is
+slower than the tuned production stacks.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import run_ranks
+
+
+def barrier_latency(nranks: int, iters: int = 200, *, ulfm: bool) -> float:
+    """Mean per-barrier latency in µs (osu_barrier-style loop)."""
+    out = {}
+
+    def fn(ctx):
+        # warmup
+        for _ in range(10):
+            ctx.barrier(ctx.world)
+        t0 = time.monotonic()
+        for _ in range(iters):
+            ctx.barrier(ctx.world)
+        dt = time.monotonic() - t0
+        if ctx.rank == 0:
+            out["us"] = dt / iters * 1e6
+        return None
+
+    run_ranks(nranks, fn, ulfm=ulfm)
+    return out["us"]
+
+
+def run(ranks=(2, 4, 8, 16), iters=200):
+    rows = []
+    for n in ranks:
+        plain = barrier_latency(n, iters, ulfm=False)
+        ulfm = barrier_latency(n, iters, ulfm=True)
+        rows.append(("table1_barrier_plain", n, plain))
+        rows.append(("table1_barrier_ulfm", n, ulfm))
+    return rows

@@ -1,0 +1,85 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + perf runs + bench output."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.roofline_table import table  # noqa: E402
+
+ART = Path("artifacts")
+
+
+def dryrun_summary() -> str:
+    recs = [json.loads(p.read_text()) for p in (ART / "dryrun").glob("*.json")]
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        ms = [r for r in recs if r["mesh"] == mesh]
+        ok = [r for r in ms if r.get("ok") and not r.get("skipped")]
+        skip = [r for r in ms if r.get("skipped")]
+        fail = [r for r in ms if not r.get("ok")]
+        chips = 256 if mesh == "16x16" else 512
+        out.append(f"* **{mesh}** ({chips} chips): {len(ok)} cells compiled, "
+                   f"{len(skip)} documented skips, {len(fail)} failures.")
+        if ok:
+            worst = max(ok, key=lambda r: r["memory"]["peak_live_bytes"])
+            out.append(f"  - largest per-device footprint: {worst['arch']} × "
+                       f"{worst['shape']} = "
+                       f"{worst['memory']['peak_live_bytes']/2**30:.1f} GiB "
+                       "(see §Perf: microbatching brings the over-HBM train "
+                       "cells under 16 GiB)")
+            slow = max(ok, key=lambda r: r.get("compile_s", 0))
+            out.append(f"  - slowest compile: {slow['arch']} × {slow['shape']} "
+                       f"= {slow['compile_s']:.0f}s (scan-over-periods keeps "
+                       "HLO size depth-independent)")
+    return "\n".join(out)
+
+
+def perf_rows() -> str:
+    rows = ["| cell | variant | compute_s | memory_s | collective_s | dom | "
+            "frac | mem GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    base = {}
+    for p in sorted((ART / "dryrun").glob("*__16x16.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok") and not r.get("skipped"):
+            base[(r["arch"], r["shape"])] = r
+    wanted = [("qwen3-moe-30b-a3b", "train_4k"), ("qwen3-1.7b", "decode_32k"),
+              ("qwen3-1.7b", "train_4k")]
+    for arch, shape in wanted:
+        b = base.get((arch, shape))
+        if b:
+            r = b["roofline"]
+            rows.append(
+                f"| {arch} × {shape} | **baseline (paper-faithful)** | "
+                f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | {r['dominant'][:4]} | "
+                f"{r['roofline_fraction']:.4f} | "
+                f"{b['memory']['peak_live_bytes']/2**30:.1f} |")
+        for p in sorted((ART / "perf").glob(f"{arch}__{shape}__*.json")):
+            rec = json.loads(p.read_text())
+            if not rec.get("ok"):
+                rows.append(f"| {arch} × {shape} | {p.stem.split('__')[-1]} | "
+                            f"FAIL | | | | | |")
+                continue
+            r = rec["roofline"]
+            rows.append(
+                f"| {arch} × {shape} | {rec.get('perf') or 'base (re-measured, final methodology)'} | "
+                f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | {r['dominant'][:4]} | "
+                f"{r['roofline_fraction']:.4f} | "
+                f"{rec['memory']['peak_live_bytes']/2**30:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run summary\n")
+        print(dryrun_summary())
+    if which in ("all", "roofline"):
+        print("\n### Roofline table (single-pod 16×16, per-step seconds)\n")
+        print(table("16x16"))
+    if which in ("all", "perf"):
+        print("\n### Perf variants\n")
+        print(perf_rows())

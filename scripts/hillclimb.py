@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimb driver: compile perf variants of the three chosen cells and
+record roofline terms to artifacts/perf/."""
+import json, sys
+from pathlib import Path
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+from repro.launch.steps import PerfOptions
+
+OUT = Path("artifacts/perf"); OUT.mkdir(parents=True, exist_ok=True)
+
+RUNS = [
+    # re-measured baselines (same methodology as the variants)
+    ("qwen3-moe-30b-a3b", "train_4k", "base", ""),
+    ("qwen3-1.7b", "decode_32k", "base", ""),
+    ("qwen3-1.7b", "train_4k", "base", ""),
+    # cell A: worst train roofline fraction + over-memory (MoE)
+    ("qwen3-moe-30b-a3b", "train_4k", "mb8",          "mb=8"),
+    ("qwen3-moe-30b-a3b", "train_4k", "mb8_ep",       "mb=8,ep=1"),
+    ("qwen3-moe-30b-a3b", "train_4k", "mb8_ep_ce",    "mb=8,ep=1,ce=2048"),
+    ("qwen3-moe-30b-a3b", "train_4k", "mb8_ep_ce_sp", "mb=8,ep=1,ce=2048,sp=1"),
+    # cell B: most collective-bound (decode)
+    ("qwen3-1.7b", "decode_32k", "cacheseq",        "cacheseq=1"),
+    # cell C: paper-representative (the in-band channel rides this step)
+    ("qwen3-1.7b", "train_4k", "noprobe",           "probes=0"),
+    ("qwen3-1.7b", "train_4k", "ce",                "ce=2048"),
+    ("qwen3-1.7b", "train_4k", "ce_sp",             "ce=2048,sp=1"),
+    ("qwen3-1.7b", "train_4k", "ce_sp_mb",          "ce=2048,sp=1,mb=4"),
+]
+
+for arch, shape, tag, spec in RUNS:
+    perf = PerfOptions.parse(spec)
+    rec = run_cell(arch, shape, multi_pod=False, perf=perf)
+    rec["perf"] = spec
+    (OUT / f"{arch}__{shape}__{tag}.json").write_text(json.dumps(rec, indent=1))
+    if rec["ok"]:
+        r = rec["roofline"]
+        print(f"{arch:22s} {shape:12s} {tag:10s} [{spec:22s}] "
+              f"comp={r['compute_s']:.3f} mem={r['memory_s']:.3f} "
+              f"coll={r['collective_s']:.3f} dom={r['dominant'][:4]} "
+              f"frac={r['roofline_fraction']:.3f} "
+              f"hbm/dev={rec['memory']['peak_live_bytes']/2**30:.1f}GiB",
+              flush=True)
+    else:
+        print(f"{arch} {shape} {tag} FAILED: {rec['error']}", flush=True)

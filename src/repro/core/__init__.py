@@ -1,0 +1,46 @@
+"""Core: the paper's contribution — exception propagation, asynchrony and fault
+handling for distributed (JAX) programs.
+
+Host-level (faithful reproduction): ``Instance``/``Comm``/``Future`` over a
+multi-rank transport with Black-Channel (MPI-3.0-only) and ULFM protocol backends.
+
+Device-level (TPU-native adaptation): in-band error word + ``DeviceFuture`` +
+``ResilientExecutor`` integrating detection/propagation/recovery into training.
+"""
+from .blackchannel import ERR_TAG, BlackChannel  # noqa: F401
+from .comm import Comm  # noqa: F401
+from .detect import ProbeConfig, step_probe  # noqa: F401
+from .device_channel import (  # noqa: F401
+    MAX_ERRORS,
+    DeviceFuture,
+    combine_words,
+    decode_table,
+    enumerate_errors_ref,
+    make_enumerate_fn,
+)
+from .errors import (  # noqa: F401
+    CancelledError,
+    CommCorruptedError,
+    ErrorCode,
+    LocalError,
+    MpiError,
+    PropagatedError,
+    RankError,
+    RankFailedError,
+    ReproError,
+    RevokedError,
+    TimeoutError_,
+)
+from .faults import FaultSchedule, FaultSpec  # noqa: F401
+from .future import Future  # noqa: F401
+from .instance import Instance, initialize  # noqa: F401
+from .recovery import Action, RecoveryDecision, RecoveryPolicy  # noqa: F401
+from .resilient import Event, EventLog, ExecutorConfig, ResilientExecutor  # noqa: F401
+from .transport import (  # noqa: F401
+    ANY_SOURCE,
+    ANY_TAG,
+    RankCtx,
+    Transport,
+    run_ranks,
+)
+from .ulfm import UlfmChannel  # noqa: F401

@@ -1,0 +1,91 @@
+"""Soft-fault probes (paper §II-A 'soft failures') for use *inside* jitted steps.
+
+Each probe returns a uint32 error word (the :class:`~repro.core.errors.ErrorCode`
+lattice); words combine with bitwise-or and ride the in-band device channel
+(``core/device_channel.py``). The heavy probes (full grad/param stream) use the
+``fault_probe`` Pallas kernel so detection stays at the memory roofline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.fault_probe import probe_tree
+from .device_channel import WORD_DTYPE, combine_words
+from .errors import ErrorCode
+
+
+@dataclass(frozen=True)
+class ProbeConfig:
+    overflow_threshold: float = 1e4      # pre-NaN early warning on grads
+    loss_divergence_threshold: float = 1e3
+    router_drop_threshold: float = 0.5   # MoE: fraction of dropped tokens
+    use_kernel: bool = True
+    probe_params: bool = False           # post-update param check (2x memory traffic)
+
+
+def _flag(cond: jax.Array, code: ErrorCode) -> jax.Array:
+    return jnp.where(cond, jnp.uint32(int(code)), jnp.uint32(0))
+
+
+def loss_probe(loss: jax.Array, cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    """NONFINITE_LOSS | DIVERGENCE (paper: 'a solver could diverge')."""
+    loss = loss.astype(jnp.float32)
+    nonfinite = jnp.logical_not(jnp.isfinite(loss))
+    diverged = jnp.logical_and(jnp.isfinite(loss),
+                               loss > cfg.loss_divergence_threshold)
+    return _flag(nonfinite, ErrorCode.NONFINITE_LOSS) | _flag(
+        diverged, ErrorCode.DIVERGENCE)
+
+
+def grad_probe(grads, cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    """NONFINITE_GRAD | OVERFLOW over the whole gradient pytree (fused kernel)."""
+    return probe_tree(grads, cfg.overflow_threshold,
+                      nonfinite_code=int(ErrorCode.NONFINITE_GRAD),
+                      overflow_code=int(ErrorCode.OVERFLOW),
+                      use_kernel=cfg.use_kernel)
+
+
+def param_probe(params, cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    return probe_tree(params, jnp.inf,
+                      nonfinite_code=int(ErrorCode.NONFINITE_PARAM),
+                      overflow_code=int(ErrorCode.OVERFLOW),
+                      use_kernel=cfg.use_kernel)
+
+
+def state_probe(state, cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    """Recurrent-state check (SSM/RG-LRU archs): STATE_FAULT."""
+    return probe_tree(state, jnp.inf,
+                      nonfinite_code=int(ErrorCode.STATE_FAULT),
+                      overflow_code=int(ErrorCode.STATE_FAULT),
+                      use_kernel=cfg.use_kernel)
+
+
+def router_probe(dropped_fraction: jax.Array,
+                 cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    """MoE local misbehaviour: excessive token dropping (capacity overflow)."""
+    return _flag(dropped_fraction > cfg.router_drop_threshold,
+                 ErrorCode.ROUTER_OVERFLOW)
+
+
+def data_probe(tokens: jax.Array, vocab_size: int) -> jax.Array:
+    """Corrupt-batch check: token ids outside [0, vocab)."""
+    bad = jnp.logical_or(jnp.any(tokens < 0), jnp.any(tokens >= vocab_size))
+    return _flag(bad, ErrorCode.DATA_FAULT)
+
+
+def step_probe(loss: jax.Array, grads, *, tokens: jax.Array | None = None,
+               vocab_size: int | None = None, states=None,
+               router_dropped: jax.Array | None = None,
+               cfg: ProbeConfig = ProbeConfig()) -> jax.Array:
+    """Combined per-step error word: the standard probe set for a train step."""
+    words = [loss_probe(loss, cfg), grad_probe(grads, cfg)]
+    if tokens is not None and vocab_size is not None:
+        words.append(data_probe(tokens, vocab_size))
+    if states is not None:
+        words.append(state_probe(states, cfg))
+    if router_dropped is not None:
+        words.append(router_probe(router_dropped, cfg))
+    return combine_words(*words)

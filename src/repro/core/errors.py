@@ -1,0 +1,179 @@
+"""Exception hierarchy and error-code lattice.
+
+Faithful port of the paper's exception taxonomy (§III-A):
+
+* ``PropagatedError``   <- ``MPICXX::Propagated_exception``: one or more remote ranks
+  signalled a *recoverable* error; carries the full set of ``(rank, code)`` pairs.
+* ``CommCorruptedError``<- ``MPICXX::Comm_corrupted_exception``: a communicator was torn
+  down during stack unwinding (or a hard fault was detected under ULFM); the
+  communicator must not be used again.
+* ``MpiError``          <- ``MPICXX::MPI_error_exception``: any transport-level error
+  that maps to neither of the above; carries the raw status code.
+* ``RevokedError``      <- ULFM ``MPI_ERR_COMM_REVOKED``: raised by any operation on a
+  communicator after ``revoke()``.
+* ``RankFailedError``   <- ULFM ``MPI_ERR_PROC_FAILED``: a peer involved in this
+  operation is dead (hard fault).
+
+Beyond the paper, :class:`ErrorCode` defines a *lattice* of device-representable error
+codes (uint32 bitmask) so that the in-band device channel can reduce codes with ``max``
+/ ``bitwise-or`` and still recover "what went wrong where" (see
+``core/device_channel.py``).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+
+class ErrorCode(enum.IntFlag):
+    """Bitmask of fault classes. Device-representable (fits uint32).
+
+    The low half encodes *soft* faults (paper §II-A: the rank survives and can still
+    communicate); the high half encodes *hard*/structural conditions. Codes combine
+    with ``|`` and reduce across ranks with ``max``/``or`` without losing classes.
+    """
+
+    OK = 0
+    # -- soft faults: numerical ---------------------------------------------------
+    NONFINITE_LOSS = 1 << 0        # NaN/Inf in the scalar loss
+    NONFINITE_GRAD = 1 << 1        # NaN/Inf anywhere in the gradient pytree
+    NONFINITE_PARAM = 1 << 2       # NaN/Inf in parameters (post-update check)
+    OVERFLOW = 1 << 3              # |value| above overflow threshold (pre-NaN warning)
+    DIVERGENCE = 1 << 4            # loss above divergence threshold / rising window
+    # -- soft faults: data / algorithm -------------------------------------------
+    DATA_FAULT = 1 << 5            # pipeline produced out-of-range / corrupt batch
+    ROUTER_OVERFLOW = 1 << 6       # MoE: token dropped-fraction above threshold
+    STATE_FAULT = 1 << 7           # SSM / RG-LRU recurrent state non-finite
+    USER = 1 << 8                  # user-signalled (paper: user-defined exception)
+    # -- structural / runtime -----------------------------------------------------
+    STRAGGLER = 1 << 16            # step-time watchdog tripped on this rank
+    CHECKPOINT_IO = 1 << 17        # async checkpoint write failed
+    # -- hard faults (ULFM territory) ---------------------------------------------
+    RANK_FAILED = 1 << 24          # peer process/node lost
+    COMM_CORRUPTED = 1 << 25       # communicator destroyed during unwinding
+
+    @property
+    def is_hard(self) -> bool:
+        return bool(self & (ErrorCode.RANK_FAILED | ErrorCode.COMM_CORRUPTED))
+
+    @property
+    def is_soft(self) -> bool:
+        return bool(self) and not self.is_hard
+
+    def classes(self) -> list["ErrorCode"]:
+        """Decompose a combined code into its constituent single-bit classes."""
+        return [c for c in ErrorCode if c != ErrorCode.OK and c & self and c.value & (c.value - 1) == 0]
+
+
+# Encoded "no error" word for device-side channels.
+OK_WORD = 0
+
+
+@dataclass(frozen=True)
+class RankError:
+    """One signalled error: which rank, which code (paper: rank number + error code)."""
+
+    rank: int
+    code: int
+
+    @property
+    def error_code(self) -> ErrorCode:
+        return ErrorCode(self.code)
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return f"rank {self.rank}: {ErrorCode(self.code)!r}"
+
+
+class ReproError(Exception):
+    """Base class for all errors raised by this framework."""
+
+
+class LocalError(ReproError):
+    """A purely local failure detected before any propagation happened.
+
+    Carries the code so the catch-site can decide to ``signal_error`` it (the paper's
+    Listing 1 inner try/catch).
+    """
+
+    def __init__(self, code: int | ErrorCode, msg: str = ""):
+        self.code = int(code)
+        super().__init__(msg or f"local error: {ErrorCode(self.code)!r}")
+
+
+class PropagatedError(ReproError):
+    """Remote rank(s) signalled an error (paper: ``Propagated_exception``).
+
+    Contains *all* ``(rank, code)`` pairs, as produced by the enumeration algorithm
+    (§III-B "Determine failed ranks and codes"). Recoverable: the communicator stays
+    valid; no revoke/shrink required.
+    """
+
+    def __init__(self, errors: Iterable[RankError]):
+        self.errors: tuple[RankError, ...] = tuple(errors)
+        super().__init__(
+            "propagated error(s): " + "; ".join(str(e) for e in self.errors)
+        )
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        return tuple(e.rank for e in self.errors)
+
+    @property
+    def combined_code(self) -> ErrorCode:
+        out = 0
+        for e in self.errors:
+            out |= e.code
+        return ErrorCode(out)
+
+
+class CommCorruptedError(ReproError):
+    """The communicator is unusable (paper: ``Comm_corrupted_exception``).
+
+    Raised when (a) a ``Comm`` was destroyed during stack unwinding on some rank, or
+    (b) a hard fault was detected (ULFM path). Must be caught *outside* the scope of
+    the ``Comm`` object; recovery requires rebuilding the communicator (shrink or
+    re-spawn) and typically a rollback or LFLR restore.
+    """
+
+    def __init__(self, errors: Iterable[RankError] = (), msg: str = ""):
+        self.errors: tuple[RankError, ...] = tuple(errors)
+        super().__init__(msg or ("communicator corrupted: " + "; ".join(str(e) for e in self.errors) if self.errors else "communicator corrupted"))
+
+
+class RevokedError(ReproError):
+    """Operation on a revoked communicator (ULFM ``MPI_ERR_COMM_REVOKED``)."""
+
+    def __init__(self, msg: str = "communicator revoked"):
+        super().__init__(msg)
+
+
+class RankFailedError(ReproError):
+    """A peer involved in this operation is dead (ULFM ``MPI_ERR_PROC_FAILED``)."""
+
+    def __init__(self, failed_ranks: Sequence[int] = (), msg: str = ""):
+        self.failed_ranks = tuple(failed_ranks)
+        super().__init__(msg or f"rank(s) failed: {list(self.failed_ranks)}")
+
+
+class MpiError(ReproError):
+    """Any other transport error (paper: ``MPI_error_exception``)."""
+
+    def __init__(self, status: int, msg: str = ""):
+        self.status = status
+        super().__init__(msg or f"transport error, status={status}")
+
+
+class CancelledError(ReproError):
+    """A request was cancelled (``MPI_Cancel`` analogue)."""
+
+
+class TimeoutError_(ReproError):
+    """A wait exceeded its deadline (used by the straggler watchdog)."""
+
+
+def combine_codes(codes: Iterable[int]) -> int:
+    out = 0
+    for c in codes:
+        out |= int(c)
+    return out

@@ -1,0 +1,135 @@
+"""Deterministic fault injection (testing + benchmarks).
+
+Covers the paper's fault taxonomy (§II-A): soft faults that leave the rank able to
+communicate (bit-flips → NaN/overflow, data corruption, divergence, user errors) and
+hard faults (rank/node loss), plus stragglers (the runtime condition the paper's
+asynchrony is designed around).
+
+Two injection surfaces:
+
+* **inside-step** (device): jitted steps accept an ``inject`` uint32 word; the
+  helpers below turn the relevant bits into NaN'd losses / corrupted grads *inside*
+  the compiled program, so detection is exercised on the real path.
+* **host-level** (simulated cluster): kill a rank thread, delay a rank (straggler),
+  corrupt a host batch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .errors import ErrorCode
+
+# injection bits (distinct from ErrorCode — these say what to *break*, the probes
+# decide what they *see*)
+INJ_NAN_LOSS = 1 << 0
+INJ_NAN_GRAD = 1 << 1
+INJ_SPIKE_LOSS = 1 << 2
+INJ_BAD_DATA = 1 << 3
+INJ_STATE_NAN = 1 << 4
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    step: int
+    kind: str          # nan_loss|nan_grad|spike_loss|bad_data|state_nan|kill|straggle|user
+    rank: int = 0
+    magnitude: float = 1.0   # straggle: seconds; spike: factor
+
+    @property
+    def inject_bit(self) -> int:
+        return {
+            "nan_loss": INJ_NAN_LOSS,
+            "nan_grad": INJ_NAN_GRAD,
+            "spike_loss": INJ_SPIKE_LOSS,
+            "bad_data": INJ_BAD_DATA,
+            "state_nan": INJ_STATE_NAN,
+        }.get(self.kind, 0)
+
+
+@dataclass
+class FaultSchedule:
+    specs: Sequence[FaultSpec] = ()
+
+    def at(self, step: int, rank: int | None = None) -> list[FaultSpec]:
+        return [s for s in self.specs
+                if s.step == step and (rank is None or s.rank == rank)]
+
+    def inject_word(self, step: int, rank: int | None = None) -> int:
+        word = 0
+        for s in self.at(step, rank):
+            word |= s.inject_bit
+        return word
+
+    def device_faults(self) -> list[FaultSpec]:
+        return [s for s in self.specs if s.inject_bit]
+
+    def host_faults(self) -> list[FaultSpec]:
+        return [s for s in self.specs if not s.inject_bit]
+
+
+# ------------------------------------------------------------------ device helpers
+def inject_loss(loss: jax.Array, inject: jax.Array) -> jax.Array:
+    """Apply loss-level injections inside a jitted step."""
+    inject = inject.astype(jnp.uint32)
+    loss = jnp.where((inject & INJ_NAN_LOSS) != 0, jnp.float32(jnp.nan), loss)
+    loss = jnp.where((inject & INJ_SPIKE_LOSS) != 0, loss * 1e6, loss)
+    return loss
+
+
+def inject_grads(grads, inject: jax.Array):
+    """NaN the first element of every gradient leaf when INJ_NAN_GRAD is set."""
+    inject = inject.astype(jnp.uint32)
+    on = (inject & INJ_NAN_GRAD) != 0
+
+    def poison(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g
+        flat = g.reshape(-1)
+        flat = flat.at[0].set(jnp.where(on, jnp.asarray(jnp.nan, g.dtype), flat[0]))
+        return flat.reshape(g.shape)
+
+    return jax.tree_util.tree_map(poison, grads)
+
+
+def inject_batch(tokens: jax.Array, inject: jax.Array) -> jax.Array:
+    """Make token ids invalid when INJ_BAD_DATA is set (tripped by data_probe)."""
+    inject = inject.astype(jnp.uint32)
+    on = (inject & INJ_BAD_DATA) != 0
+    first = jnp.where(on, jnp.asarray(-1, tokens.dtype),
+                      tokens.reshape(-1)[0])
+    return tokens.reshape(-1).at[0].set(first).reshape(tokens.shape)
+
+
+def inject_state(state, inject: jax.Array):
+    inject = inject.astype(jnp.uint32)
+    on = (inject & INJ_STATE_NAN) != 0
+
+    def poison(s):
+        if not jnp.issubdtype(s.dtype, jnp.floating):
+            return s
+        flat = s.reshape(-1)
+        flat = flat.at[0].set(jnp.where(on, jnp.asarray(jnp.nan, s.dtype), flat[0]))
+        return flat.reshape(s.shape)
+
+    return jax.tree_util.tree_map(poison, state)
+
+
+# -------------------------------------------------------------------- host helpers
+def apply_host_fault(spec: FaultSpec, ctx=None) -> Optional[ErrorCode]:
+    """Execute a host-level fault on the simulated cluster. Returns the error code a
+    detector would raise locally, or None for silent faults (kill)."""
+    if spec.kind == "kill":
+        if ctx is not None:
+            ctx.die()  # unwinds the rank thread (hard fault)
+        return None
+    if spec.kind == "straggle":
+        time.sleep(spec.magnitude)
+        return ErrorCode.STRAGGLER
+    if spec.kind == "user":
+        return ErrorCode.USER
+    return None

@@ -1,0 +1,93 @@
+"""Deterministic, shardable, checkpointable synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — so (a) the iterator
+state is a single integer that travels inside checkpoints (restart resumes the
+*exact* stream), (b) after an elastic shrink the surviving hosts re-shard the
+stream by changing ``num_shards``/``shard`` only, and (c) fault-injection tests
+can corrupt a batch without touching pipeline state.
+
+The token stream is a Markov-ish mixture over a synthetic vocabulary with
+enough structure that cross-entropy demonstrably falls during the quickstart
+run (pure-random tokens would train to a constant)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PipelineConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int            # per-shard batch
+    seed: int = 0
+    num_shards: int = 1
+    shard: int = 0
+    family: str = "lm"         # lm | audio | vlm
+    d_model: int = 0           # audio/vlm stubs
+    img_tokens: int = 0
+
+
+def _batch_rng(cfg: PipelineConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        (cfg.seed * 1_000_003 + step) * 65_521 + cfg.shard)
+
+
+def make_batch(cfg: PipelineConfig, step: int) -> dict:
+    """Pure function of (config, step): the whole pipeline contract."""
+    rng = _batch_rng(cfg, step)
+    B, S, V = cfg.batch_size, cfg.seq_len, cfg.vocab_size
+    # structured stream: per-sequence drift + short-range repetition
+    base = rng.integers(0, V, size=(B, 1))
+    drift = rng.integers(-3, 4, size=(B, S)).cumsum(axis=1)
+    noise = rng.integers(0, V // 8 + 1, size=(B, S))
+    tokens = np.abs(base + drift * (V // 64 + 1) + noise) % V
+    tokens = tokens.astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = tokens[:, 0]
+    batch = {"labels": jnp.asarray(labels)}
+    if cfg.family == "audio":
+        emb = rng.standard_normal((B, S, cfg.d_model)).astype(np.float32)
+        batch["inputs_embeds"] = jnp.asarray(emb)
+    else:
+        batch["tokens"] = jnp.asarray(tokens)
+    if cfg.family == "vlm":
+        img = rng.standard_normal((B, cfg.img_tokens, cfg.d_model)) * 0.02
+        batch["img_embeds"] = jnp.asarray(img.astype(np.float32))
+    return batch
+
+
+@dataclass
+class DataIterator:
+    """Stateful wrapper with a checkpointable cursor."""
+
+    cfg: PipelineConfig
+    step: int = 0
+
+    def __iter__(self) -> "DataIterator":
+        return self
+
+    def __next__(self) -> dict:
+        b = make_batch(self.cfg, self.step)
+        self.step += 1
+        return b
+
+    # --- checkpoint / elastic hooks ---
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed,
+                "shard": self.cfg.shard, "num_shards": self.cfg.num_shards}
+
+    def load_state_dict(self, s: dict) -> None:
+        self.step = int(s["step"])
+
+    def reshard(self, num_shards: int, shard: int) -> "DataIterator":
+        """Elastic shrink: same stream, new shard layout, same cursor."""
+        import dataclasses
+
+        new_cfg = dataclasses.replace(self.cfg, num_shards=num_shards,
+                                      shard=shard)
+        return DataIterator(new_cfg, step=self.step)

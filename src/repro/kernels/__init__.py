@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True against ref oracles).
+
+fault_probe - fused non-finite/overflow detection (every-step soft-fault probe)
+flash_attention - online-softmax attention fwd (causal/sliding/GQA)
+ssd_scan - Mamba-2 SSD intra-chunk kernel + jnp inter-chunk recurrence
+rglru_scan - RG-LRU linear recurrence, one-HBM-pass sequential scan
+"""

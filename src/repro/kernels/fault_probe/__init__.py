@@ -1,0 +1,2 @@
+from .ops import probe_array, probe_tree  # noqa: F401
+from .ref import probe_array_ref, probe_tree_ref  # noqa: F401

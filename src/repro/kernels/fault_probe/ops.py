@@ -1,0 +1,54 @@
+"""Jit-ready wrappers for the fault-probe kernel (with shape normalisation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import probe_rows
+from .ref import probe_array_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def probe_array(x: jax.Array, threshold: float, *, nonfinite_code: int,
+                overflow_code: int, block_rows: int = 256,
+                use_kernel: bool = True) -> jax.Array:
+    """Scalar uint32 error word for one array (any shape/float dtype).
+
+    Pads the flattened stream with zeros (finite, below threshold ⇒ no false
+    positives) to a ``(k·block_rows, 128)`` tile grid.
+    """
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.uint32(0)
+    n = x.size
+    # Kernel only on real TPU: in interpret mode the grid is traced step-by-step,
+    # which would explode trace time for multi-GB grad streams (CPU dry-runs use
+    # the fused-by-XLA oracle path; the kernel is validated separately at small
+    # shapes with interpret=True).
+    if not use_kernel or n < block_rows * 128 or _use_interpret():
+        return probe_array_ref(x, threshold, nonfinite_code=nonfinite_code,
+                               overflow_code=overflow_code)
+    flat = x.reshape(-1)
+    tile = block_rows * 128
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    rows = flat.size // 128
+    return probe_rows(flat.reshape(rows, 128), jnp.asarray(threshold),
+                      nonfinite_code=nonfinite_code, overflow_code=overflow_code,
+                      block_rows=block_rows, interpret=_use_interpret())
+
+
+def probe_tree(tree, threshold: float, *, nonfinite_code: int, overflow_code: int,
+               block_rows: int = 256, use_kernel: bool = True) -> jax.Array:
+    """OR-fold of per-leaf probe words over a pytree."""
+    word = jnp.uint32(0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        word = word | probe_array(leaf, threshold, nonfinite_code=nonfinite_code,
+                                  overflow_code=overflow_code,
+                                  block_rows=block_rows, use_kernel=use_kernel)
+    return word

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fault probe."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_array_ref(x: jax.Array, threshold: float, *, nonfinite_code: int,
+                    overflow_code: int) -> jax.Array:
+    x = x.astype(jnp.float32)
+    nonfinite = jnp.any(jnp.logical_not(jnp.isfinite(x)))
+    finite_x = jnp.where(jnp.isfinite(x), x, 0.0)
+    over = jnp.any(jnp.abs(finite_x) > threshold)
+    return (jnp.where(nonfinite, jnp.uint32(nonfinite_code), jnp.uint32(0))
+            | jnp.where(over, jnp.uint32(overflow_code), jnp.uint32(0)))
+
+
+def probe_tree_ref(tree, threshold: float, *, nonfinite_code: int,
+                   overflow_code: int) -> jax.Array:
+    word = jnp.uint32(0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        word = word | probe_array_ref(leaf, threshold,
+                                      nonfinite_code=nonfinite_code,
+                                      overflow_code=overflow_code)
+    return word

@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention (fwd): online softmax over KV blocks in VMEM.
+
+Grid: (batch·q_heads, num_q_blocks, num_kv_blocks) — the KV dimension is the
+innermost (sequential) grid axis, so the running (acc, m, l) state lives in VMEM
+scratch across KV steps and is flushed to the output block on the last step.
+Causal/sliding masks are applied with 2D iotas; fully-masked KV blocks are skipped
+with ``pl.when`` (predicated-off on TPU, zero compute).
+
+GQA is handled by the k/v BlockSpec index maps: query-head ``h`` reads KV head
+``h // group`` — no repeated KV materialisation.
+
+Block shapes: q (1, block_q, head_dim), k/v (1, block_kv, head_dim); head_dim is
+expected to be lane-aligned (128/256 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, q_offset: int,
+                  block_q: int, block_kv: int, seq_kv: int, num_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # static-shape positions for this (qi, kj) block pair
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv),
+                                                   0) + q_offset
+    kpos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv),
+                                                    1)
+    # does this block pair intersect the mask at all?
+    q_lo = qi * block_q + q_offset
+    q_hi = q_lo + block_q - 1
+    k_lo = kj * block_kv
+    k_hi = k_lo + block_kv - 1
+    needed = jnp.bool_(True)
+    if causal:
+        needed = jnp.logical_and(needed, k_lo <= q_hi)
+    if window:
+        needed = jnp.logical_and(needed, k_hi > q_lo - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0].astype(jnp.float32)               # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = kpos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[:, 0] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool, window: int = 0,
+                        q_offset: int = 0, block_q: int = 512,
+                        block_kv: int = 512, seq_kv: int | None = None,
+                        interpret: bool = True):
+    """q: (BH, S, D) with BH = batch·q_heads; k/v: (BKv, T, D); S and T must be
+    block multiples (ops.py pads); ``seq_kv`` is the true (unpadded) KV length
+    for masking. Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    BKv, T, _ = k.shape
+    group = BH // BKv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0, (S, T, block_q, block_kv)
+    nq, nk = S // block_q, T // block_kv
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+        seq_kv=seq_kv if seq_kv is not None else T, num_kv=nk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda bh, qi, kj, group=group: (bh // group, kj, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda bh, qi, kj, group=group: (bh // group, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

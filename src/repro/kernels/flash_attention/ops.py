@@ -1,0 +1,38 @@
+"""Jit wrapper: (B,S,H,D) layout ↔ kernel layout, backend dispatch.
+
+The TPU path uses the Pallas kernel for the forward; the backward falls back to
+the custom-VJP jnp flash (``models.attention.sdpa_chunked``), which is already
+recompute-based — on-TPU a Pallas backward kernel would slot in here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0, block_q: int = 512,
+                    block_kv: int = 512) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,T,Hkv,D) → (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    bq, bkv = min(block_q, S), min(block_kv, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bkv) * bkv
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qk = qp.transpose(0, 2, 1, 3).reshape(B * Hq, Sp, D)
+    kk = kp.transpose(0, 2, 1, 3).reshape(B * Hkv, Tp, D)
+    vk = vp.transpose(0, 2, 1, 3).reshape(B * Hkv, Tp, D)
+    out = flash_attention_fwd(qk, kk, vk, causal=causal, window=window,
+                              q_offset=q_offset, block_q=bq,
+                              block_kv=bkv, seq_kv=T,
+                              interpret=_use_interpret())
+    return out.reshape(B, Hq, Sp, D)[:, :, :S].transpose(0, 2, 1, 3)

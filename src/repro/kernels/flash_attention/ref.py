@@ -1,0 +1,2 @@
+"""Oracle for the flash kernel: re-export the naive SDPA reference."""
+from ...models.attention import sdpa_ref  # noqa: F401

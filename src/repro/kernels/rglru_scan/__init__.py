@@ -1,0 +1,2 @@
+from .ops import rglru_scan  # noqa: F401
+from .ref import rglru_scan_assoc, rglru_scan_ref  # noqa: F401

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence.
+
+h_t = a_t ⊙ h_{t-1} + x_t  (inputs pre-gated by ops.py: x_t = √(1−a²)·i·x)
+
+Grid: (batch, width-blocks) — channels are independent, so the kernel holds one
+(width-block) hidden-state vector in VMEM scratch and walks the sequence with a
+``fori_loop``, one fused multiply-add + store per step. This is the TPU-native
+shape of the computation: a single HBM pass over (S, blk) with O(blk) state —
+the recurrence is memory-bound, so one pass IS the roofline. (A log-depth
+Blelloch tree would add passes; the associative-scan jnp path exists as the
+XLA fallback.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, x_ref, o_ref, h_ref):
+    S = x_ref.shape[1]
+
+    h_ref[...] = jnp.zeros_like(h_ref)
+
+    def body(t, _):
+        a_t = a_ref[0, t, :].astype(jnp.float32)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        h = a_t * h_ref[0, :] + x_t
+        h_ref[0, :] = h
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, S, body, 0)
+
+
+def rglru_scan_blocks(a, x, *, block_w: int = 128, interpret: bool = True):
+    """a, x: (B, S, W) → h: (B, S, W). a = exp(log_a) decay in [0,1)."""
+    B, S, W = a.shape
+    block_w = min(block_w, W)
+    assert W % block_w == 0, (W, block_w)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        _rglru_kernel,
+        grid=(B, W // block_w),
+        in_specs=[
+            pl.BlockSpec((1, S, block_w), lambda b, w: (b, 0, w)),
+            pl.BlockSpec((1, S, block_w), lambda b, w: (b, 0, w)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_w), lambda b, w: (b, 0, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

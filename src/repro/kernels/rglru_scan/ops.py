@@ -1,0 +1,22 @@
+"""Jit wrapper matching the ``models.rglru`` scan contract."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_blocks
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rglru_scan(x_in, log_a, *, block_w: int = 128):
+    """x_in: (B,S,W) pre-gate input i⊙x; log_a: (B,S,W) ≤ 0.
+
+    Applies the √(1−a²) input normalisation and runs the recurrence kernel.
+    """
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_in.astype(jnp.float32)
+    return rglru_scan_blocks(a, gated, block_w=block_w,
+                             interpret=_use_interpret())

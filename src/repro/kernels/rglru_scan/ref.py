@@ -1,0 +1,2 @@
+"""Oracles: sequential scan and log-depth associative scan."""
+from ...models.rglru import rglru_scan_assoc, rglru_scan_ref  # noqa: F401

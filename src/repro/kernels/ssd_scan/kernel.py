@@ -1,0 +1,72 @@
+"""Pallas TPU kernel for the Mamba-2 SSD *intra-chunk* computation.
+
+One grid cell = one (batch, chunk, head): loads the chunk's x·dt (L,P), B/C
+(L,N) and per-step log-decay ā (L,) into VMEM and produces
+
+  * ``y_diag``  (L,P): the causal 'attention-like' intra-chunk term
+    ``(C Bᵀ ⊙ exp(segsum ā)) · x``  — one L×L decay matrix built in-register,
+  * ``state``   (P,N): the chunk's contribution to the inter-chunk recurrence
+    ``Σ_j exp(cum_L − cum_j) B_j ⊗ x_j``.
+
+The O(S/L)-length inter-chunk scan and the rank-1 ``y_off`` correction stay in
+jnp (``ops.py``) — they are tiny and sequential. Chunk length L and state width N
+are 128 by default (MXU-aligned); P = head_dim = 64 for mamba2-2.7b (sublane-
+aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (L, P)
+    a = a_ref[0, 0, :, 0].astype(jnp.float32)         # (L,)
+    b = b_ref[0, 0, :, 0, :].astype(jnp.float32)      # (L, N)
+    c = c_ref[0, 0, :, 0, :].astype(jnp.float32)      # (L, N)
+    L = x.shape[0]
+    cum = jnp.cumsum(a)                               # (L,)
+    seg = cum[:, None] - cum[None, :]                 # segsum: i≥j valid
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)        # (L, L)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))  # (L, L)
+    y = jax.lax.dot_general(scores * decay, x, (((1,), (0,)), ((), ())))
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    dstates = jnp.exp(cum[-1] - cum)                  # (L,)
+    st = jax.lax.dot_general(x * dstates[:, None], b,
+                             (((0,), (0,)), ((), ())))  # (P, N)
+    st_ref[0, 0, 0, :, :] = st.astype(st_ref.dtype)
+
+
+def ssd_intra_chunk(xd, abar, B, C, *, interpret: bool = True):
+    """xd: (b,nc,L,h,p); abar: (b,nc,L,h); B,C: (b,nc,L,h,n) (heads already
+    broadcast). Returns (y_diag (b,nc,L,h,p), states (b,nc,h,p,n))."""
+    b, nc, L, h, p = xd.shape
+    n = B.shape[-1]
+    grid = (b, nc, h)
+    y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, L, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xd, abar, B, C)
+    return y, st

@@ -1,0 +1,2 @@
+"""Oracles: naive recurrence and the pure-jnp chunked SSD."""
+from ...models.ssm import ssd_chunked, ssd_naive_ref  # noqa: F401

@@ -1,0 +1,155 @@
+"""Elastic scaling: continue training after losing ranks/devices.
+
+Two layers, matching DESIGN.md §2:
+
+1. **Single-controller re-mesh** (``shrink_remesh``): after a (simulated) device
+   loss, rebuild a smaller mesh, re-derive shardings from the same logical rules
+   and ``device_put`` the surviving state onto it. With a data-axis shrink the
+   global batch per step drops; the deterministic pipeline reshards by changing
+   its (num_shards, shard) only.
+
+2. **Multi-controller elastic trainer** (``ElasticTrainer``): the paper's full
+   choreography on the thread-rank runtime — data-parallel ranks, gradient
+   all-reduce through ``Comm``/``Future`` (waits raise the paper's exceptions),
+   soft faults propagated via ``signal_error``, hard faults (rank kill) detected
+   by ULFM, survivors ``shrink``, restore the lost shard's contribution from the
+   buddy store, re-partition the stream, and keep training. This is use case 1
+   (LFLR) + use case 3 (rollback fallback) of the paper, driving real training.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import BuddyStore
+from ..core import (
+    Comm,
+    CommCorruptedError,
+    ErrorCode,
+    PropagatedError,
+    initialize,
+    run_ranks,
+)
+from ..core.faults import FaultSchedule, apply_host_fault
+from ..sharding import batch_shardings, moment_shardings, param_shardings
+
+
+# ------------------------------------------------------------ 1. re-mesh layer
+def shrink_remesh(state, new_mesh, *, donate: bool = False):
+    """Re-shard a train state onto a smaller mesh using the same logical rules."""
+    p_shard = param_shardings(state["params"], new_mesh)
+    m_shard = moment_shardings(state["params"], new_mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(new_mesh, P())
+    new_state = {
+        "params": jax.device_put(state["params"], p_shard),
+        "opt": {"m": jax.device_put(state["opt"]["m"], m_shard),
+                "v": jax.device_put(state["opt"]["v"], m_shard)},
+        "step": jax.device_put(state["step"], repl),
+        "lr_scale": jax.device_put(state["lr_scale"], repl),
+    }
+    return new_state
+
+
+# ------------------------------------------- 2. multi-controller elastic trainer
+@dataclass
+class ElasticResult:
+    rank: int
+    steps_done: int = 0
+    final_loss: float = float("nan")
+    world_sizes: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+    weights: Optional[np.ndarray] = None
+
+
+def _make_local_step(dim: int, lr: float):
+    """Tiny data-parallel model (linear regression) — the protocol under test is
+    the communication/recovery choreography, not the model."""
+
+    @jax.jit
+    def local_grad(w, x, y):
+        pred = x @ w
+        loss = jnp.mean((pred - y) ** 2)
+        g = jax.grad(lambda w_: jnp.mean((x @ w_ - y) ** 2))(w)
+        return loss, g
+
+    return local_grad
+
+
+def elastic_train(nranks: int, steps: int, *, dim: int = 16, lr: float = 0.1,
+                  faults: FaultSchedule | None = None, seed: int = 0,
+                  timeout: float = 30.0) -> list:
+    """Run the elastic trainer on ``nranks`` simulated hosts; returns per-rank
+    ElasticResult. Survivors finish all ``steps`` even if ranks die."""
+    faults = faults or FaultSchedule()
+    buddies = BuddyStore(nranks)
+
+    # ground-truth weights for the regression stream
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((dim, 1)).astype(np.float32)
+
+    def rank_fn(ctx):
+        inst = initialize(ctx, default_timeout=timeout)
+        comm = inst.comm_world()
+        res = ElasticResult(rank=ctx.rank)
+        local_grad = _make_local_step(dim, lr)
+        w = jnp.zeros((dim, 1), jnp.float32)
+        step = 0
+        while step < steps:
+            res.world_sizes.append(comm.size)
+            # host-level faults for this rank at this step
+            for spec in faults.at(step, ctx.rank):
+                if spec.kind == "kill":
+                    apply_host_fault(spec, ctx)     # never returns
+            # deterministic per-(rank, step) batch over the *current* membership
+            bg = np.random.default_rng(1000 * step + comm.rank)
+            x = bg.standard_normal((8, dim)).astype(np.float32)
+            y = x @ w_true
+            loss, g = local_grad(w, jnp.asarray(x), jnp.asarray(y))
+            code = 0
+            for spec in faults.at(step, ctx.rank):
+                if spec.kind == "nan_grad":
+                    g = jnp.full_like(g, jnp.nan)
+            if not bool(jnp.all(jnp.isfinite(g))):
+                code = int(ErrorCode.NONFINITE_GRAD)
+            try:
+                if code:
+                    comm.signal_error(code)     # raises PropagatedError locally
+                fut = comm.all_reduce(np.asarray(g, np.float64), op="sum")
+                g_sum = fut.wait()
+                w = w - lr * jnp.asarray(g_sum, jnp.float32) / comm.size
+                step += 1
+                res.steps_done += 1
+                if step % 5 == 0:
+                    buddies.push(comm.rank, step, {"w": w})
+            except PropagatedError as e:
+                # LFLR: skip the poisoned update everywhere, keep going
+                res.events.append(("propagated", step, [x.rank for x in e.errors]))
+                step += 1
+                continue
+            except CommCorruptedError:
+                # hard fault: shrink, recover from buddy coverage, continue
+                comm.shrink_to_survivors()
+                got = None
+                for r in buddies.ranks_covered():
+                    got = buddies.recover(r)
+                    if got is not None:
+                        break
+                if got is not None:
+                    ck_step, shard = got
+                    w = jnp.asarray(shard["w"])
+                    step = ck_step
+                res.events.append(("shrink", step, comm.size))
+                continue
+        res.final_loss = float(loss)
+        res.weights = np.asarray(w)
+        return res
+
+    results = run_ranks(nranks, rank_fn, ulfm=True, join_timeout=timeout * 4)
+    return results

@@ -1,0 +1,314 @@
+"""Step factories: jitted train / prefill / decode steps with the paper's in-band
+error channel integrated (every step returns ``(outputs, metrics, error_word)``),
+plus ShapeDtypeStruct input specs and shardings for every (arch × shape) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.detect import ProbeConfig, loss_probe, state_probe, step_probe
+from ..core.faults import inject_batch, inject_grads, inject_loss
+from ..models import build_model
+from ..optim import AdamWConfig, adamw_update, init_opt_state, reset_moments
+from ..sharding import (
+    batch_shardings,
+    cache_shardings,
+    moment_shardings,
+    param_shardings,
+)
+
+
+# ----------------------------------------------------------------- perf options
+from dataclasses import dataclass as _dataclass
+
+
+@_dataclass(frozen=True)
+class PerfOptions:
+    """Beyond-paper performance levers (see EXPERIMENTS.md §Perf).
+
+    microbatch      — gradient accumulation over k microbatches (scan): activation
+                      memory ÷ k at the cost of one grads-sized fp32 accumulator.
+    ce_chunk        — chunked cross-entropy: never materialise (B,S,V) logits.
+    seq_shard       — sequence-parallel residual stream: constrain activations to
+                      P(dp, "model", None) between blocks so GSPMD lowers the
+                      Megatron all-reduces to reduce-scatter + all-gather.
+    cache_seq_model — decode KV caches sharded on the *capacity* dim over "model"
+                      (scores stay sequence-sharded; softmax/psum exchanges tiny
+                      (B,H) statistics instead of (B,H,T) score tensors).
+    probes          — the in-band device channel on/off (off only for overhead
+                      measurement — never in production).
+    """
+
+    microbatch: int = 0
+    ce_chunk: int = 0
+    seq_shard: bool = False
+    cache_seq_model: bool = False
+    probes: bool = True
+    ep_constraint: bool = False   # MoE dispatch buffers constrained E-over-model
+
+    @classmethod
+    def parse(cls, spec: str) -> "PerfOptions":
+        """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1' → PerfOptions."""
+        kw: dict = {}
+        for part in (spec or "").split(","):
+            if not part:
+                continue
+            k, v = part.split("=")
+            k = {"mb": "microbatch", "ce": "ce_chunk", "sp": "seq_shard",
+                 "cacheseq": "cache_seq_model", "probes": "probes",
+                 "ep": "ep_constraint"}[k]
+            kw[k] = bool(int(v)) if k in ("seq_shard", "cache_seq_model",
+                                          "probes", "ep_constraint") else int(v)
+        return cls(**kw)
+
+
+BASELINE = PerfOptions()
+
+# Dry-run cost-variant compiles set this so the microbatch scan is unrolled
+# (cost_analysis counts while bodies once; see dryrun._corrected_costs).
+MB_UNROLL = False
+
+
+# -------------------------------------------------------------------- factories
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    probe_cfg: ProbeConfig | None = None, *, impl: str = "auto",
+                    perf: PerfOptions = BASELINE):
+    """(state, batch, inject) → (state', metrics, error_word).
+
+    The error word is the in-band device channel (DESIGN.md §2): probes over loss,
+    the full gradient stream, input tokens and the MoE router are OR-combined into
+    one uint32 that the host's DeviceFuture converts into the paper's exceptions.
+    """
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    probe_cfg = probe_cfg or ProbeConfig()
+
+    from ..models import transformer as _tf
+
+    def _loss_and_grads(params, batch, tokens_inj):
+        def loss_fn(p):
+            b = dict(batch)
+            if tokens_inj is not None:
+                b["tokens"] = tokens_inj
+            loss, aux = model.loss(p, b, impl=impl, ce_chunk=perf.ce_chunk)
+            return loss, aux
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state, batch, inject):
+        if True:
+            tokens = batch.get("tokens")
+            tokens_inj = (inject_batch(tokens, inject)
+                          if tokens is not None else None)
+            if perf.microbatch > 1:
+                k = perf.microbatch
+
+                def slice_mb(x, i):
+                    B = x.shape[0]
+                    return jax.lax.dynamic_slice_in_dim(x, i * (B // k),
+                                                        B // k, 0)
+
+                def body(carry, i):
+                    g_acc, l_acc, d_acc = carry
+                    b_i = {kk: slice_mb(v, i) for kk, v in batch.items()}
+                    t_i = slice_mb(tokens_inj, i) if tokens_inj is not None else None
+                    (loss, aux), grads = _loss_and_grads(state["params"], b_i,
+                                                         t_i)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32) / k, g_acc,
+                        grads)
+                    return (g_acc, l_acc + loss / k,
+                            d_acc + aux["dropped_fraction"] / k), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32),
+                    state["params"])
+                import repro.launch.steps as _steps_mod
+                (grads, loss, dropped), _ = jax.lax.scan(
+                    body, (g0, jnp.float32(0), jnp.float32(0)),
+                    jnp.arange(k),
+                    unroll=True if _steps_mod.MB_UNROLL else 1)
+                aux = {"dropped_fraction": dropped}
+            else:
+                (loss, aux), grads = _loss_and_grads(state["params"], batch,
+                                                     tokens_inj)
+            loss = inject_loss(loss, inject)
+            grads = inject_grads(grads, inject)
+            if perf.probes:
+                word = step_probe(
+                    loss, grads,
+                    tokens=tokens_inj,
+                    vocab_size=cfg.vocab_size if tokens is not None else None,
+                    router_dropped=(aux["dropped_fraction"]
+                                    if cfg.is_moe else None),
+                    cfg=probe_cfg)
+            else:
+                word = jnp.uint32(0)
+            new_params, new_opt, stats = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"], state["step"],
+                lr_scale=state["lr_scale"])
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1,
+                         "lr_scale": state["lr_scale"]}
+            metrics = {"loss": loss, "grad_norm": stats["grad_norm"],
+                       "lr": stats["lr"],
+                       "dropped_fraction": aux["dropped_fraction"]}
+            return new_state, metrics, word
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None, *,
+                      impl: str = "auto"):
+    model = build_model(cfg)
+    probe_cfg = probe_cfg or ProbeConfig()
+
+    def prefill_step(params, batch):
+        logits, aux = model.forward(
+            params, batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            img_embeds=batch.get("img_embeds"), impl=impl)
+        # serve-side probe: non-finite logits ⇒ NONFINITE_LOSS-class soft fault
+        word = loss_probe(jnp.max(jnp.abs(logits)),
+                          ProbeConfig(loss_divergence_threshold=jnp.inf))
+        return logits, word
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
+    model = build_model(cfg)
+    probe_cfg = probe_cfg or ProbeConfig()
+
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, token, cache, pos)
+        # probe recurrent states only (KV re-probing would double memory traffic)
+        words = [loss_probe(jnp.max(jnp.abs(logits)),
+                            ProbeConfig(loss_divergence_threshold=jnp.inf))]
+        rec = _recurrent_states(new_cache)
+        if rec:
+            words.append(state_probe(rec, probe_cfg))
+        word = functools.reduce(lambda a, b: a | b, words)
+        return logits, new_cache, word
+
+    return decode_step
+
+
+def _recurrent_states(cache) -> list:
+    out = []
+
+    def visit(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if any(k in ("ssm", "h") for k in keys):
+            out.append(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, cache)
+    return out
+
+
+def make_reset_opt_fn(cfg: ModelConfig):
+    """Paper use case 2: optimizer-moment reset + lr decay ('solver restart')."""
+
+    @jax.jit
+    def reset(state, lr_scale):
+        return {"params": state["params"],
+                "opt": reset_moments(state["opt"]),
+                "step": state["step"],
+                "lr_scale": state["lr_scale"] * lr_scale}
+
+    return reset
+
+
+# ------------------------------------------------------------------ input specs
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one global batch (train / prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"labels": _tok((B, S))}
+    if cfg.family == "audio":
+        batch["inputs_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                      jnp.bfloat16)
+    else:
+        batch["tokens"] = _tok((B, S))
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.img_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def state_specs(cfg: ModelConfig) -> dict:
+    model = build_model(cfg)
+    params = model.param_shapes()
+    opt = jax.eval_shape(init_opt_state, params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "lr_scale": jax.ShapeDtypeStruct((), jnp.float32)}
+
+
+def state_shardings(cfg: ModelConfig, mesh) -> dict:
+    specs = state_specs(cfg)
+    return {
+        "params": param_shardings(specs["params"], mesh),
+        "opt": {k: moment_shardings(specs["params"], mesh)
+                for k in ("m", "v")},
+        "step": NamedSharding(mesh, P()),
+        "lr_scale": NamedSharding(mesh, P()),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                kind: str | None = None, perf: PerfOptions = BASELINE):
+    """(args, in_shardings) for the cell's step function.
+
+    train  → (state, batch, inject)
+    prefill→ (params, batch)
+    decode → (params, cache, token, pos)
+    """
+    kind = kind or shape.kind
+    repl = NamedSharding(mesh, P())
+    if kind == "train":
+        st = state_specs(cfg)
+        batch = batch_specs(cfg, shape)
+        args = (st, batch, jax.ShapeDtypeStruct((), jnp.uint32))
+        shardings = (state_shardings(cfg, mesh), batch_shardings(batch, mesh),
+                     repl)
+        return args, shardings
+    if kind == "prefill":
+        st = state_specs(cfg)["params"]
+        batch = batch_specs(cfg, shape)
+        return (st, batch), (param_shardings(st, mesh),
+                             batch_shardings(batch, mesh))
+    if kind == "decode":
+        model = build_model(cfg)
+        st = state_specs(cfg)["params"]
+        B = shape.global_batch
+        cache = model.cache_shapes(B, shape.seq_len)
+        token = _tok((B, 1))
+        shard_seq = shape.name == "long_500k"
+        args = (st, cache, token, jax.ShapeDtypeStruct((), jnp.int32))
+        shardings = (param_shardings(st, mesh),
+                     cache_shardings(cache, mesh, shard_seq=shard_seq,
+                                     seq_over_model=perf.cache_seq_model),
+                     batch_shardings({"t": token}, mesh)["t"], repl)
+        return args, shardings
+    raise ValueError(kind)
+
+
+def make_step_for(cfg: ModelConfig, shape: ShapeConfig, *, impl: str = "auto",
+                  perf: PerfOptions = BASELINE):
+    if shape.kind == "train":
+        return make_train_step(cfg, impl=impl, perf=perf)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, impl=impl)
+    return make_decode_step(cfg)

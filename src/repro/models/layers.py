@@ -1,0 +1,184 @@
+"""Common layers: norms, rotary embeddings (3 styles), MLP variants, embeddings.
+
+Parameters are plain pytrees (dicts of jnp arrays); every init function takes an
+rng key and returns the params dict. Sharding is attached later by path-based
+logical-axis rules (``repro.sharding.rules``), so layers stay mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------------ norms
+def init_norm(cfg, dtype=jnp.float32):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_vec(x, scale, eps: float = 1e-6):
+    """RMS norm over the last axis with an explicit scale vector (qk-norm etc.)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, *, theta: float, style: str = "standard",
+               fraction: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    * ``standard`` — half-split rotation (llama/qwen/gemma convention);
+    * ``partial2d`` — chatglm: rotary over ``fraction`` of the head dim in
+      interleaved-pair form, the remainder left untouched;
+    * ``none`` — no positional encoding (hubert's conv-positional stub).
+    """
+    if style == "none":
+        return x
+    head_dim = x.shape[-1]
+    if style == "standard":
+        inv, rot_dim = rope_freqs(head_dim, theta, 1.0)
+        ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+        cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+        return out.astype(x.dtype)
+    if style == "partial2d":
+        inv, rot_dim = rope_freqs(head_dim, theta, fraction)
+        xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+        ang = positions[..., :, None].astype(jnp.float32) * inv
+        cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+        xr = xr.astype(jnp.float32).reshape(*xr.shape[:-1], rot_dim // 2, 2)
+        r1, r2 = xr[..., 0], xr[..., 1]
+        rot = jnp.stack([r1 * cos - r2 * sin, r2 * cos + r1 * sin], axis=-1)
+        rot = rot.reshape(*rot.shape[:-2], rot_dim).astype(x.dtype)
+        return jnp.concatenate([rot, xp], axis=-1)
+    raise ValueError(f"unknown rope style {style}")
+
+
+# -------------------------------------------------------------------------- mlp
+def init_mlp(key, cfg, d_ff: int | None = None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wo": _dense_init(ks[2], (d_ff, cfg.d_model), dtype=dtype)}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wi"] = _dense_init(ks[0], (cfg.d_model, d_ff), dtype=dtype)
+        p["wg"] = _dense_init(ks[1], (cfg.d_model, d_ff), dtype=dtype)
+    else:  # plain gelu
+        p["wi"] = _dense_init(ks[0], (cfg.d_model, d_ff), dtype=dtype)
+    return p
+
+
+def apply_mlp(p, x, kind: str):
+    h = x @ p["wi"]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"]
+
+
+# -------------------------------------------------------------------- embedding
+def init_embed(key, cfg, dtype=jnp.float32):
+    p = {"embedding": _dense_init(key, (cfg.vocab_size, cfg.d_model),
+                                  scale=1.0, dtype=dtype)}
+    return p
+
+
+def embed_tokens(p, tokens, dtype):
+    return jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p_unembed, p_embed, x, tie: bool, softcap: float = 0.0):
+    """Logits in fp32 (loss numerics); optionally soft-capped (gemma)."""
+    w = p_embed["embedding"].T if tie else p_unembed["kernel"]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def init_unembed(key, cfg, dtype=jnp.float32):
+    if cfg.tie_embeddings:
+        return {}
+    return {"kernel": _dense_init(key, (cfg.d_model, cfg.vocab_size), dtype=dtype)}
+
+
+# ------------------------------------------------------------------------- loss
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE; logits fp32 (batch, seq, vocab), labels (batch, seq)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(x, labels, unembed_fn, chunk: int):
+    """CE without materialising the full (B,S,V) fp32 logits: scan over sequence
+    chunks, computing logits → per-token NLL per chunk (recomputed in backward).
+    ``unembed_fn(x_chunk) -> fp32 logits chunk``. The big-vocab archs (gemma3
+    262k, qwen 152k) are memory-bound on the CE chain without this (§Perf)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    valid = jnp.ones((B, S), jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nchunks = x.shape[1] // chunk
+    xc = x.reshape(B, nchunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nchunks, chunk).transpose(1, 0, 2)
+    vc = valid.reshape(B, nchunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(args):
+        xch, lch, vch = args
+        logits = unembed_fn(xch)                   # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * vch)
+
+    def body(acc, args):
+        return acc + chunk_nll(args), None
+
+    from .attention import INNER_UNROLL  # cost-exact unroll for dry-run variants
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xc, lc, vc),
+                            unroll=True if INNER_UNROLL else 1)
+    return total / (B * S)

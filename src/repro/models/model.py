@@ -1,0 +1,152 @@
+"""Top-level model: init / forward / loss / decode — uniform over all 10 archs.
+
+``[audio]``/``[vlm]`` modality frontends are STUBS per the assignment: callers pass
+precomputed frame/patch embeddings (``inputs_embeds`` / ``img_embeds``); only the
+transformer backbone is modelled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import precompute_cross_kv
+from .layers import (
+    apply_norm,
+    chunked_cross_entropy,
+    embed_tokens,
+    init_embed,
+    init_norm,
+    init_unembed,
+    softmax_cross_entropy,
+    unembed,
+)
+from .transformer import (
+    apply_stack_decode,
+    apply_stack_train,
+    init_stack,
+    init_stack_cache,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class Model:
+    """Functional model bound to a config (params are explicit pytrees)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_embed, k_stack, k_un = jax.random.split(key, 3)
+        params = {
+            "embed": init_embed(k_embed, cfg, dt),
+            "stack": init_stack(k_stack, cfg, dt),
+            "final_norm": init_norm(cfg, jnp.float32),
+        }
+        un = init_unembed(k_un, cfg, dt)
+        if un:
+            params["unembed"] = un
+        return params
+
+    def param_shapes(self) -> dict:
+        """Shape/dtype tree without allocation (dry-run / sharding planning)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------ forward
+    def forward(self, params, tokens=None, *, inputs_embeds=None, img_embeds=None,
+                impl: str = "auto"):
+        """Full-sequence forward → fp32 logits (train and prefill)."""
+        cfg = self.cfg
+        x, aux = self.backbone(params, tokens, inputs_embeds=inputs_embeds,
+                               img_embeds=img_embeds, impl=impl)
+        logits = unembed(params.get("unembed"), params["embed"], x,
+                         cfg.tie_embeddings, cfg.logit_softcap)
+        return logits, aux
+
+    def loss(self, params, batch, *, impl: str = "auto", ce_chunk: int = 0):
+        if ce_chunk:
+            x, aux = self.backbone(
+                params, batch.get("tokens"),
+                inputs_embeds=batch.get("inputs_embeds"),
+                img_embeds=batch.get("img_embeds"), impl=impl)
+            cfg = self.cfg
+
+            def unembed_fn(xc):
+                return unembed(params.get("unembed"), params["embed"], xc,
+                               cfg.tie_embeddings, cfg.logit_softcap)
+
+            loss = chunked_cross_entropy(x, batch["labels"], unembed_fn,
+                                         ce_chunk)
+            return loss, aux
+        logits, aux = self.forward(
+            params, batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            img_embeds=batch.get("img_embeds"), impl=impl)
+        loss = softmax_cross_entropy(logits, batch["labels"],
+                                     batch.get("loss_mask"))
+        return loss, aux
+
+    def backbone(self, params, tokens=None, *, inputs_embeds=None,
+                 img_embeds=None, impl: str = "auto"):
+        """Forward up to (but excluding) the unembedding (for chunked CE)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        if inputs_embeds is not None:
+            x = inputs_embeds.astype(dt)
+        else:
+            x = embed_tokens(params["embed"], tokens, dt)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, dt)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if img_embeds is not None:
+            img_embeds = img_embeds.astype(dt)
+        x, drop = apply_stack_train(params["stack"], x, positions, cfg,
+                                    img_embeds=img_embeds, impl=impl)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return x, {"dropped_fraction": drop}
+
+    # ------------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return init_stack_cache(batch, self.cfg, max_len, _dtype(self.cfg))
+
+    def cache_shapes(self, batch: int, max_len: int) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def decode_step(self, params, token, cache, pos):
+        """One new token against an existing cache (serve_step for decode cells).
+
+        token: (B, 1) int32; pos: scalar int32 (global position). Returns
+        (fp32 logits (B, 1, V), new cache).
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = embed_tokens(params["embed"], token, dt)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, dt)
+        x, new_cache, _ = apply_stack_decode(params["stack"], x, cache, pos, cfg)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params.get("unembed"), params["embed"], x,
+                         cfg.tie_embeddings, cfg.logit_softcap)
+        return logits, new_cache
+
+    def prefill(self, params, tokens, *, img_embeds=None, impl: str = "auto"):
+        """Prefill returning logits only (the prefill_32k cells lower this).
+
+        Cache-producing prefill for interactive serving is in
+        ``launch/serve.py`` (decode-loop based; exact, small-scale).
+        """
+        return self.forward(params, tokens, img_embeds=img_embeds, impl=impl)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

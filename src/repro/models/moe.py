@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity buffers, expert-parallel layout.
+
+TPU-native dispatch (GShard/Switch lineage): tokens are scattered into per-expert
+capacity buffers so the expert matmuls are dense einsums that shard cleanly over the
+expert axis (EP on the ``model`` mesh axis).
+
+Dispatch is *grouped per batch row* (vmap over B): the position-in-expert cumsum
+runs along the sequence axis inside each row, so it never crosses data-parallel
+shards — no cross-device cumsum chains in the SPMD partitioning. Capacity is
+therefore per (row, expert): C = ceil(cf · S · K / E).
+
+Tokens beyond capacity are dropped and the dropped fraction is returned — it feeds
+the paper's ``ROUTER_OVERFLOW`` soft-fault probe (``repro.core.detect.router_probe``),
+making router pathologies a first-class propagated error instead of a silent
+quality regression.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+# Optional PartitionSpec for the (B, E, C, d) dispatch buffers, set by the launch
+# layer (§Perf lever "ep"): constraining E over "model" makes GSPMD move tokens
+# to their experts with an all-to-all-shaped scatter instead of all-gathering
+# the full capacity buffers onto every device.
+EXPERT_SPEC = None
+
+
+def _constrain_e(x):
+    if EXPERT_SPEC is not None:
+        import jax as _jax
+
+        return _jax.lax.with_sharding_constraint(x, EXPERT_SPEC)
+    return x
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": _dense_init(ks[0], (d, E), dtype=jnp.float32),  # fp32 routing
+        "wo": _dense_init(ks[3], (E, f, d), dtype=dtype),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wi"] = _dense_init(ks[1], (E, d, f), dtype=dtype)
+        p["wg"] = _dense_init(ks[2], (E, d, f), dtype=dtype)
+    else:
+        p["wi"] = _dense_init(ks[1], (E, d, f), dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(cfg.expert_capacity_factor * tokens_per_group
+            * cfg.num_experts_per_tok / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)     # lane-friendly multiple of 8
+
+
+def _dispatch_row(xt, expert_idx, gate_vals, E: int, C: int):
+    """One batch row. xt:(S,d), expert_idx/gate_vals:(S,K) → (E,C,d) buffers plus
+    combine metadata."""
+    S, d = xt.shape
+    K = expert_idx.shape[1]
+    flat_idx = expert_idx.reshape(-1)                        # (S*K,)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < C
+    buf_idx = jnp.where(keep, flat_idx * C + pos, E * C)     # trash row at E*C
+    token_of = jnp.repeat(jnp.arange(S), K)
+    buffers = jnp.zeros((E * C + 1, d), xt.dtype)
+    buffers = buffers.at[buf_idx].set(xt[token_of], mode="drop")
+    return buffers[: E * C].reshape(E, C, d), (buf_idx, token_of, keep)
+
+
+def _combine_row(out_e, meta, gate_vals, S: int):
+    buf_idx, token_of, keep = meta
+    E_C, d = out_e.reshape(-1, out_e.shape[-1]).shape
+    flat_out = out_e.reshape(E_C, d)
+    safe_idx = jnp.where(keep, buf_idx, 0)
+    gathered = flat_out[safe_idx] * keep[:, None].astype(flat_out.dtype)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(flat_out.dtype)
+    return jax.ops.segment_sum(weighted, token_of, num_segments=S)
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) → (B, S, d), plus aux dict (dropped fraction, load)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(S, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    buffers, meta = jax.vmap(
+        lambda xt, ei, gv: _dispatch_row(xt, ei, gv, E, C)
+    )(x, expert_idx, gate_vals)                              # (B, E, C, d)
+    buffers = _constrain_e(buffers)
+
+    h = jnp.einsum("becd,edf->becf", buffers, p["wi"])
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buffers, p["wg"])) * h
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buffers, p["wg"]),
+                        approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out_e = _constrain_e(jnp.einsum("becf,efd->becd", h, p["wo"]))  # (B,E,C,d)
+
+    combined = jax.vmap(lambda oe, m, gv: _combine_row(oe, m, gv, S))(
+        out_e, meta, gate_vals)
+
+    keep = meta[2]
+    dropped_fraction = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    load = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                    axis=(0, 1, 2)) * E
+    aux = {"dropped_fraction": dropped_fraction, "load_max": jnp.max(load)}
+    return combined.reshape(B, S, d), aux

@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+with a_t = exp(−c·softplus(Λ)·r_t), r_t = σ(W_a x_t), i_t = σ(W_x x_t); the gate
+projections are block-diagonal over ``lru_heads`` blocks (Griffin §2.4). Train path
+uses ``jax.lax.associative_scan`` (log-depth); a Pallas kernel
+(``repro.kernels.rglru_scan``) implements the block-parallel scan for TPU. Decode is
+an O(1) single-step update.
+
+Block layout (the Griffin recurrent block): x → [linear → GeLU] ⊗ [linear →
+causal-conv → RG-LRU] → linear out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+C_SCALE = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.resolved_lru_width
+    nb = cfg.lru_heads or cfg.num_heads
+    blk = w // nb
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": _dense_init(ks[0], (d, w), dtype=dtype),          # recurrence branch
+        "wy": _dense_init(ks[1], (d, w), dtype=dtype),          # gate branch
+        "conv_w": _dense_init(ks[2], (4, w), scale=0.5, dtype=dtype),
+        "gate_a": _dense_init(ks[3], (nb, blk, blk), dtype=dtype),
+        "gate_i": _dense_init(ks[4], (nb, blk, blk), dtype=dtype),
+        # Λ init so that a ≈ 0.9..0.999 at r=0.5 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, w))).astype(jnp.float32),
+        "out": _dense_init(ks[5], (w, d), dtype=dtype),
+    }
+
+
+def _blockdiag(x, w_blocks):
+    """x: (B,S,w) @ block-diagonal weights (nb, blk, blk) → (B,S,w)."""
+    B, S, w = x.shape
+    nb, blk, _ = w_blocks.shape
+    xb = x.reshape(B, S, nb, blk)
+    return jnp.einsum("bsnk,nkj->bsnj", xb, w_blocks).reshape(B, S, w)
+
+
+def _causal_conv(u, w):
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        out = out + up[:, i: i + u.shape[1]] * w[i]
+    return out
+
+
+def _gates(p, xr):
+    """r, i gates and log-decay a from the recurrence-branch activations."""
+    r = jax.nn.sigmoid(_blockdiag(xr, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(xr, p["gate_i"]).astype(jnp.float32))
+    log_a = -C_SCALE * jax.nn.softplus(p["lam"]) * r      # (B,S,w), ≤ 0
+    return log_a, i
+
+
+def rglru_scan_ref(x_in, log_a):
+    """Oracle: sequential scan. x_in = i⊙x (already gated), log_a: (B,S,w)."""
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_in
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    B, S, w = x_in.shape
+    _, hs = jax.lax.scan(step, jnp.zeros((B, w), jnp.float32),
+                         (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def rglru_scan_assoc(x_in, log_a):
+    """Log-depth associative scan: elements (a, b) compose as (a2·a1, a2·b1+b2)."""
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_in
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return hs
+
+
+def rglru_mixer(p, x, cfg, impl: str = "auto"):
+    """x: (B,S,d) → (B,S,d). Train/prefill path."""
+    xr = x @ p["wx"]
+    gate = jax.nn.gelu((x @ p["wy"]).astype(jnp.float32), approximate=True)
+    xr = _causal_conv(xr, p["conv_w"].astype(x.dtype))
+    log_a, i = _gates(p, xr)
+    x_in = i * xr.astype(jnp.float32)
+    if impl == "auto":
+        impl = "assoc"
+    if impl == "ref":
+        h = rglru_scan_ref(x_in, log_a)
+    elif impl == "pallas":
+        from ..kernels.rglru_scan import rglru_scan
+        h = rglru_scan(x_in, log_a)
+    else:
+        h = rglru_scan_assoc(x_in, log_a)
+    y = (h * gate).astype(x.dtype)
+    return y @ p["out"]
+
+
+# ----------------------------------------------------------------------- decode
+def init_rglru_cache(batch, cfg, dtype):
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), dtype),     # width-4 conv → 3 history steps
+    }
+
+
+def rglru_decode(p, x, cache, cfg):
+    B, S, d = x.shape
+    assert S == 1
+    xr = (x @ p["wx"])[:, 0]                          # (B,w)
+    gate = jax.nn.gelu((x @ p["wy"])[:, 0].astype(jnp.float32), approximate=True)
+    window = jnp.concatenate([cache["conv"], xr[:, None]], axis=1)  # (B,4,w)
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+    new_conv = window[:, 1:]
+    log_a, i = _gates(p, conv[:, None])
+    log_a, i = log_a[:, 0], i[:, 0]
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * conv.astype(jnp.float32))
+    h = a * cache["h"] + x_in
+    y = (h * gate).astype(x.dtype)[:, None]
+    return y @ p["out"], {"h": h, "conv": new_conv}

@@ -1,0 +1,213 @@
+"""Mamba-2 (SSD — state-space duality) mixer: chunked train path + O(1) decode.
+
+Three implementations of the SSD scan:
+
+* ``ssd_naive_ref`` — per-token recurrence via ``lax.scan`` (the oracle);
+* ``ssd_chunked``  — the paper's chunked algorithm (intra-chunk 'attention-like'
+  quadratic term + inter-chunk state recurrence), pure jnp. Default lowering path;
+* Pallas kernel (``repro.kernels.ssd_scan``) for the intra-chunk hot loop on TPU.
+
+Layout: x:(B,S,H,P) heads, B/C:(B,S,G,N) groups (G | H), dt:(B,S,H), A:(H,).
+Recurrence per head: h_t = exp(dt_t·A)·h_{t-1} + dt_t·B_t⊗x_t;  y_t = C_t·h_t + D·x_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, rms_norm_vec
+
+
+# ------------------------------------------------------------------------- init
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d, din = cfg.d_model, cfg.d_inner
+    H, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N, W = cfg.ssm_ngroups, cfg.ssm_state_dim, cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    conv_dim = din + 2 * G * N
+    return {
+        "in_x": _dense_init(ks[0], (d, din), dtype=dtype),
+        "in_z": _dense_init(ks[1], (d, din), dtype=dtype),
+        "in_B": _dense_init(ks[2], (d, G * N), dtype=dtype),
+        "in_C": _dense_init(ks[3], (d, G * N), dtype=dtype),
+        "in_dt": _dense_init(ks[4], (d, H), dtype=dtype),
+        "conv_w": _dense_init(ks[5], (W, conv_dim), scale=0.5, dtype=dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1 init
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dtype),
+        "out": _dense_init(ks[6], (din, d), dtype=dtype),
+    }
+
+
+def _causal_conv(u, w):
+    """u: (B,S,C), w: (W,C) depthwise causal conv along S."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        out = out + up[:, i: i + u.shape[1]] * w[i]
+    return out
+
+
+def _segsum(x):
+    """x: (..., L) → (..., L, L) with out[i,j] = sum_{k=j+1..i} x_k (i ≥ j)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+# ----------------------------------------------------------------------- oracle
+def ssd_naive_ref(x, dt, A, B, C):
+    """Per-token scan. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n) → y:(b,s,h,p)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)   # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(hstate, inputs):
+        xt, dtt, Bt, Ct = inputs       # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        a = jnp.exp(dtt * A)           # (b,h)
+        hstate = (hstate * a[..., None, None]
+                  + (dtt[..., None] * xt)[..., :, None] * Bt[..., None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", hstate, Ct)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Ch.transpose(1, 0, 2, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- chunked
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD (Mamba-2 §6): O(S·L) intra + O(S/L) inter-chunk recurrence."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    # fold dt into x: contribution of token j is dt_j·B_j⊗x_j
+    xd = xf * dtf[..., None]
+    abar = dtf * A                                      # (b,s,h) log-decay per step
+    # chunk views
+    xc = xd.reshape(b, nc, L, h, p)
+    ac = abar.reshape(b, nc, L, h)
+    Bc = jnp.repeat(B, rep, axis=2).astype(jnp.float32).reshape(b, nc, L, h, n)
+    Cc = jnp.repeat(C, rep, axis=2).astype(jnp.float32).reshape(b, nc, L, h, n)
+
+    # --- intra-chunk (quadratic, 'attention-like') ---
+    Lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))   # (b,nc,h,L,L)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Cc, Bc)   # (b,nc,h,L,L)
+    y_diag = jnp.einsum("bchlm,bchlm,bcmhp->bclhp", scores, Lmat, xc)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(ac, axis=2)                         # (b,nc,L,h)
+    total = cum[:, :, -1]                                # (b,nc,h)
+    decay_states = jnp.exp(total[:, :, None] - cum)      # (b,nc,L,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, decay_states, xc)
+
+    # --- inter-chunk recurrence over chunk states ---
+    def step(hprev, inp):
+        st, tot = inp                                    # (b,h,p,n), (b,h)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, hprevs = jax.lax.scan(step, h0, (states.transpose(1, 0, 2, 3, 4),
+                                        total.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)             # (b,nc,h,p,n) state *before* chunk
+
+    # --- off-diagonal contribution ---
+    decay_in = jnp.exp(cum)                              # (b,nc,L,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, hprevs, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ full mixer
+def mamba2_mixer(p, x, cfg, impl: str = "auto"):
+    """x: (B,S,d) → (B,S,d). Train/prefill path."""
+    B_, S, d = x.shape
+    H, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state_dim
+    xs = x @ p["in_x"]
+    z = x @ p["in_z"]
+    Bv = x @ p["in_B"]
+    Cv = x @ p["in_C"]
+    dt = x @ p["in_dt"]
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype)))
+    xs = conv_out[..., : cfg.d_inner].reshape(B_, S, H, P)
+    Bv = conv_out[..., cfg.d_inner: cfg.d_inner + G * N].reshape(B_, S, G, N)
+    Cv = conv_out[..., cfg.d_inner + G * N:].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if impl == "auto":
+        impl = "chunked"
+    if impl == "naive":
+        y = ssd_naive_ref(xs, dt, A, Bv, Cv)
+    elif impl == "pallas":
+        from ..kernels.ssd_scan import ssd_scan
+        y = ssd_scan(xs, dt, A, Bv, Cv, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_chunked(xs, dt, A, Bv, Cv, chunk=cfg.ssm_chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rms_norm_vec(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out"]
+
+
+# ----------------------------------------------------------------------- decode
+def init_mamba2_cache(batch, cfg, dtype):
+    H, P, N = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state_dim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state_dim
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg):
+    """One-token step: O(1) state update (this is why long_500k runs for SSM)."""
+    B_, S, d = x.shape
+    assert S == 1
+    H, P = cfg.ssm_nheads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state_dim
+    xs = x @ p["in_x"]
+    z = x @ p["in_z"]
+    Bv = x @ p["in_B"]
+    Cv = x @ p["in_C"]
+    dt = x @ p["in_dt"]
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)[:, 0]       # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))
+    new_conv = window[:, 1:]
+    xs1 = conv_out[:, : cfg.d_inner].reshape(B_, H, P)
+    Bv1 = conv_out[:, cfg.d_inner: cfg.d_inner + G * N].reshape(B_, G, N)
+    Cv1 = conv_out[:, cfg.d_inner + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bv1, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv1, rep, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt1 * A)                                          # (B,H)
+    hstate = (cache["ssm"] * a[..., None, None]
+              + (dt1[..., None] * xs1.astype(jnp.float32))[..., :, None]
+              * Bh[..., None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", hstate, Ch)
+    y = y + xs1.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm_vec(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out"], {"ssm": hstate, "conv": new_conv}

@@ -1,0 +1,98 @@
+"""Gradient compression for the cross-pod (DCN) reduction, with error feedback.
+
+On a multi-pod mesh the "pod" axis crosses data-center network, 10-25× slower
+than ICI. The standard distributed-optimization trick: reduce in-pod at full
+precision (reduce-scatter over "data"), then compress the cross-pod leg.
+
+Two codecs:
+* ``int8``  — per-tensor scale quantisation (8×→4× byte reduction vs f32/bf16);
+* ``topk``  — magnitude top-k sparsification with *error feedback* (the residual
+  of what was not transmitted is added to the next step's gradient — guarantees
+  the compression error stays bounded instead of accumulating).
+
+``compressed_psum`` composes with ``shard_map`` over the pod axis; the error-
+feedback buffer is part of the optimizer state (sharded like moments).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    codec: str = "none"        # none | int8 | topk
+    topk_fraction: float = 0.01
+    error_feedback: bool = True
+
+
+# ------------------------------------------------------------------ int8 codec
+def quantize_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ------------------------------------------------------------------ topk codec
+def topk_mask(x: jax.Array, fraction: float) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.size * fraction))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array,
+                           cfg: CompressionConfig):
+    """Returns (payload_to_reduce, new_residual). Pure — usable inside jit."""
+    g = g.astype(jnp.float32)
+    if cfg.error_feedback:
+        g = g + residual
+    if cfg.codec == "topk":
+        mask = topk_mask(g, cfg.topk_fraction)
+        sent = g * mask
+        new_residual = g - sent if cfg.error_feedback else jnp.zeros_like(g)
+        return sent, new_residual
+    if cfg.codec == "int8":
+        q, scale = quantize_int8(g)
+        sent = dequantize_int8(q, scale)
+        new_residual = g - sent if cfg.error_feedback else jnp.zeros_like(g)
+        return sent, new_residual
+    return g, jnp.zeros_like(g)
+
+
+def compressed_psum(g: jax.Array, residual: jax.Array, axis_name: str,
+                    cfg: CompressionConfig):
+    """Inside shard_map over the pod axis: compress → psum → mean.
+
+    Note the int8 payload itself is what crosses DCN on real hardware; here the
+    dequantised tensor is psum'ed (XLA has no int8 all-reduce), so the *numerics*
+    of quantised reduction are exact while the dry-run's collective-bytes term
+    models the payload via ``wire_bytes_factor``.
+    """
+    sent, new_residual = compress_with_feedback(g, residual, cfg)
+    n = jax.lax.psum(1, axis_name)
+    reduced = jax.lax.psum(sent, axis_name) / n
+    return reduced, new_residual
+
+
+def wire_bytes_factor(cfg: CompressionConfig) -> float:
+    """Bytes-on-wire multiplier vs f32 (for the roofline collective term)."""
+    if cfg.codec == "int8":
+        return 0.25
+    if cfg.codec == "topk":
+        # value + index per surviving element
+        return cfg.topk_fraction * 2.0
+    return 1.0
+
+
+def init_residuals(params) -> dict:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

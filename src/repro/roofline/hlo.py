@@ -1,0 +1,243 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``cost_analysis()`` does not expose collective bytes, so we extract them from the
+optimized module: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction's *result* shape is summed
+(per-device bytes — the module is the per-device SPMD program). Start/done pairs
+(``all-gather-start`` etc.) are counted once via the start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+# one shape token, e.g. f32[16,128]{1,0} or bf16[] — layout suffix optional
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# instruction line: "%name = <shape-or-tuple> <opcode>(" — opcode may have -start
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)]*?\)?)\s+"
+    r"(" + "|".join(COLLECTIVE_KINDS) + r")(-start)?\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    largest: list = field(default_factory=list)      # (bytes, kind, line prefix)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+            "largest": self.largest[:10],
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_text, kind, started = m.group(1), m.group(2), m.group(3)
+        # "-done" ops carry the same result shape; only count starts + sync ops
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(shape_text)
+        stats.bytes_by_kind[kind] += b
+        stats.count_by_kind[kind] += 1
+        stats.largest.append((b, kind, line.strip()[:120]))
+    stats.largest.sort(key=lambda t: -t[0])
+    return stats
+
+
+_FUSION_RE = re.compile(r"\bfusion\(")
+
+# ---------------------------------------------------------------- HBM estimator
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_RESULT_NAME = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPCODE = re.compile(r"=\s*(?:\(?[^)=]*?\)?)\s+([a-z][\w\-]*)\(")
+
+_ZERO_COST_OPS = {"parameter", "bitcast", "get-tuple-element", "tuple",
+                  "constant", "iota", "after-all", "partition-id"}
+
+
+def _split_computations(hlo_text: str):
+    """Computation name → body lines. A computation header is a non-indented line
+    ending in '{' whose first token (after optional ENTRY) is the name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if line and not line[0].isspace() and stripped.endswith("{"):
+            head = stripped[:-1].strip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(")[0].strip().lstrip("%").strip()
+            if not name or " " in name:
+                cur = None
+                continue
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = cur
+            continue
+        if cur is not None and stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def estimate_hbm_bytes(hlo_text: str) -> dict:
+    """Fusion-boundary traffic proxy: Σ over *top-level* instructions (ENTRY +
+    while bodies × parsed trip count) of (result bytes + operand bytes), where a
+    fusion op counts only at its boundary. ``cost_analysis()`` on the CPU backend
+    sums ops *inside* fusion computations (register/VMEM traffic on a real TPU),
+    wildly over-counting HBM bytes — this estimator is the roofline's memory-term
+    numerator instead."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return {"total_bytes": 0, "by_computation": {}}
+
+    # map: computation -> list of (opcode, result_bytes, operand names, line)
+    fusion_bodies: set[str] = set()
+    while_info: list[tuple[str, str, str]] = []   # (comp_of_while, cond, body)
+    parsed: dict[str, list] = {}
+    for cname, lines in comps.items():
+        rows = []
+        for line in lines:
+            m = _RESULT_NAME.match(line)
+            if not m:
+                continue
+            opm = _OPCODE.search(line)
+            opcode = opm.group(1) if opm else "?"
+            shape_part = line.split("=", 1)[1]
+            shape_part = shape_part.split(opcode + "(", 1)[0] if opm else shape_part
+            rbytes = _shape_bytes(shape_part)
+            opm2 = _OPERANDS.search(line.split(opcode + "(", 1)[1]
+                                    if opm and opcode + "(" in line else "")
+            operands = []
+            if opm and opcode + "(" in line:
+                inner = line.split(opcode + "(", 1)[1]
+                depth, buf = 1, []
+                for ch in inner:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    buf.append(ch)
+                operands = [t.strip().lstrip("%") for t in "".join(buf).split(",")
+                            if t.strip().startswith("%")]
+            rows.append((m.group(1), opcode, rbytes, operands, line))
+            for cm in _CALLS.finditer(line):
+                if opcode == "fusion":
+                    fusion_bodies.add(cm.group(1))
+            wm = _WHILE_ATTRS.search(line)
+            if wm and opcode == "while":
+                while_info.append((cname, wm.group(1), wm.group(2)))
+        parsed[cname] = rows
+
+    # trip counts: max int constant reachable from the while condition
+    # computation (the bound constant may live in a called/fused computation)
+    name_re = re.compile(r"%([\w\.\-]+)")
+    trips: dict[str, int] = {}
+    for _, cond, body in while_info:
+        text_parts = ["\n".join(comps.get(cond, []))]
+        for ref in name_re.findall(text_parts[0]):
+            if ref in comps and ref != cond:
+                text_parts.append("\n".join(comps[ref]))
+        consts = [int(x) for x in _CONST_INT.findall("\n".join(text_parts))]
+        trips[body] = max(consts) if consts else 1
+
+    coll_bytes: dict[str, float] = {}
+
+    def comp_bytes(cname: str, mult: float, seen: set) -> float:
+        if cname in seen:
+            return 0.0
+        seen = seen | {cname}
+        total = 0.0
+        result_bytes = {r[0]: r[2] for r in parsed.get(cname, [])}
+        for name, opcode, rbytes, operands, line in parsed.get(cname, []):
+            if opcode in _ZERO_COST_OPS:
+                continue
+            if opcode == "while":
+                wm = _WHILE_ATTRS.search(line)
+                if wm:
+                    total += comp_bytes(wm.group(2), mult * trips.get(wm.group(2), 1),
+                                        seen)
+                continue
+            if opcode in ("conditional", "call"):
+                for cm in _CALLS.finditer(line):
+                    total += comp_bytes(cm.group(1), mult, seen)
+                continue
+            for kind in COLLECTIVE_KINDS:
+                if opcode == kind or opcode == kind + "-start":
+                    coll_bytes[kind] = coll_bytes.get(kind, 0.0) + mult * rbytes
+                    break
+            # slicing ops touch slice-sized data, not their full operands:
+            # dynamic-slice reads+writes the slice (2×result); dynamic-update-
+            # slice reads the update and writes it in place (2×update≈2×min-op)
+            if opcode in ("dynamic-slice", "slice"):
+                total += mult * 2 * rbytes
+                continue
+            if opcode == "dynamic-update-slice":
+                upd = min((result_bytes.get(o, rbytes) for o in operands[1:2]),
+                          default=rbytes)
+                total += mult * 2 * min(upd, rbytes)
+                continue
+            ob = sum(result_bytes.get(o, 0) for o in operands)
+            total += mult * (rbytes + ob)
+        return total
+
+    total = comp_bytes(entry, 1.0, set())
+    return {"total_bytes": total, "trip_counts": trips,
+            "collective_bytes_by_kind": coll_bytes,
+            "collective_total": sum(coll_bytes.values())}
+
+
+def op_histogram(hlo_text: str) -> dict:
+    """Rough opcode histogram (for spotting remat-duplicated ops, reshapes)."""
+    hist: dict[str, int] = defaultdict(int)
+    opcode_re = re.compile(r"=\s*(?:\(?[^)=]*?\)?)\s+([a-z][\w\-]*)\(")
+    for line in hlo_text.splitlines():
+        m = opcode_re.search(line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(sorted(hist.items(), key=lambda kv: -kv[1]))

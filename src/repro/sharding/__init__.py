@@ -1,0 +1,10 @@
+from .rules import (  # noqa: F401
+    batch_shardings,
+    batch_spec,
+    cache_shardings,
+    cache_specs,
+    moment_shardings,
+    moment_specs,
+    param_shardings,
+    param_specs,
+)

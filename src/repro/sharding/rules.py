@@ -1,0 +1,213 @@
+"""Logical sharding rules: param-path patterns → PartitionSpec.
+
+DP over ("pod", "data") for batch; TP/EP over "model" for weights:
+
+* embeddings/logits: vocab over "model";
+* attention: fused head×head_dim output dims over "model" (works for every GQA
+  config assigned: kv_heads·head_dim is a multiple of 16 in all ten archs);
+* MLP: d_ff over "model";
+* MoE: experts over "model" (EP); router replicated (tiny, avoids a top-k gather);
+* Mamba-2: heads (d_inner) over "model"; B/C group projections + depthwise conv
+  replicated (G=1 is not shardable; they are <0.3% of layer bytes);
+* RG-LRU: recurrence-branch weights replicated (10 gate blocks don't divide the
+  16-way model axis; the branch is ~15% of layer FLOPs — revisit in §Perf);
+* norms/scalars: replicated.
+
+ZeRO-1: optimizer moments take the param spec with the first still-replicated,
+divisible dim additionally sharded over "data".
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# (path regex, spec template). "M" → model axis, None → replicated.
+# Paths look like: stack/periods/b0/attn/wq  (leading stack dim of period-stacked
+# params adds one dimension at the FRONT: specs below are for the *layer* dims and
+# get a None prepended automatically for stacked leaves.)
+RULES: list[tuple[str, tuple]] = [
+    (r"embed/embedding$", ("M", None)),
+    (r"unembed/kernel$", (None, "M")),
+    # 3D projections (d, heads, head_dim): heads over model. The < model_size
+    # guard auto-replicates wk/wv when kv_heads < model axis (GQA standard).
+    (r"attn/wq$", (None, "M", None)),
+    (r"attn/wk$", (None, "M", None)),
+    (r"attn/wv$", (None, "M", None)),
+    (r"attn/wo$", ("M", None, None)),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    (r"mlp/w[ig]$", (None, "M")),
+    (r"mlp/wo$", ("M", None)),
+    (r"moe/router$", (None, None)),
+    (r"moe/w[ig]$", ("M", None, None)),
+    (r"moe/wo$", ("M", None, None)),
+    (r"ssd/in_[xz]$", (None, "M")),
+    (r"ssd/in_[BC]$", (None, None)),
+    (r"ssd/in_dt$", (None, "M")),
+    (r"ssd/conv_w$", (None, None)),
+    (r"ssd/(dt_bias|A_log|D)$", ("M",)),
+    (r"ssd/norm_scale$", ("M",)),
+    (r"ssd/out$", ("M", None)),
+    (r"rglru/", None),               # None template → fully replicated leaf
+    (r"norm[12]?/", None),
+    (r"final_norm/", None),
+    (r"gate_(attn|mlp)$", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:  # pragma: no cover
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, shape, model_axis, model_size: int):
+    for pat, template in RULES:
+        if re.search(pat, path_s):
+            if template is None:
+                return P()
+            spec = [model_axis if t == "M" else None for t in template]
+            # period-stacked leaves carry a leading num_periods dim
+            while len(spec) < ndim:
+                spec.insert(0, None)
+            # pjit *argument* shardings must divide evenly (intermediates may
+            # pad, arguments may not). If the intended dim doesn't divide,
+            # fall back to the next divisible dim — e.g. starcoder2's 24 heads
+            # on a 16-way model axis shard head_dim (128) instead: the einsum
+            # contraction pattern (partial products + psum) is identical.
+            for i, ax in enumerate(spec):
+                if ax is None or shape[i] % model_size == 0:
+                    continue
+                spec[i] = None
+                order = list(range(i + 1, ndim)) + list(range(0, i))
+                for j in order:
+                    if (spec[j] is None and shape[j] % model_size == 0
+                            and shape[j] >= model_size
+                            and not (ndim > len(template) and j == 0)):
+                        spec[j] = model_axis
+                        break
+            return P(*spec)
+    return P()  # default: replicated
+
+
+def param_specs(params_or_shapes, mesh: Mesh):
+    """Pytree of PartitionSpec for a param tree (arrays or ShapeDtypeStructs)."""
+    model_axis = "model"
+    model_size = mesh.shape[model_axis]
+
+    def leaf_spec(path, leaf):
+        return _spec_for(_path_str(path), len(leaf.shape), leaf.shape,
+                         model_axis, model_size)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_or_shapes)
+
+
+def param_shardings(params_or_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(params_or_shapes, mesh))
+
+
+def moment_specs(params_or_shapes, mesh: Mesh):
+    """ZeRO-1: param spec + first replicated divisible dim sharded over "data"."""
+    data_size = mesh.shape["data"]
+    specs = param_specs(params_or_shapes, mesh)
+
+    def zero1(spec: P, leaf):
+        shape = leaf.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, ax in enumerate(parts):
+            if ax is None and shape[i] % data_size == 0 and shape[i] >= data_size:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(zero1, specs, params_or_shapes)
+
+
+def moment_shardings(params_or_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  moment_specs(params_or_shapes, mesh))
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    """Batch dim over all data-parallel axes (pod × data when multi-pod)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(s):
+        # batch=1 cells (long_500k) replicate the token; sequence parallelism
+        # happens in the cache shardings instead
+        if s.shape and s.shape[0] % dp_size == 0:
+            return NamedSharding(mesh, batch_spec(mesh, len(s.shape)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, *, shard_seq: bool = False,
+                seq_over_model: bool = False):
+    """KV/state caches: batch dim over DP axes; kv-head/state dims over model
+    where divisible.
+
+    ``shard_seq``: long-context mode (long_500k, batch=1) — shard the capacity
+    dim of KV caches over "data" (sequence parallelism for decode).
+    ``seq_over_model``: §Perf lever — shard the capacity dim over "model"
+    instead of head_dim, so decode attention keeps scores sequence-local and
+    the per-layer exchange drops from O(B·H·T) score all-reduces to O(B·H)
+    softmax statistics + O(B·H·hd) outputs."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model_size = mesh.shape["model"]
+    data_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        ps = _path_str(path)
+        parts: list = [None] * len(shape)
+        # leading dims: optional period-stack dim then batch
+        bdim = 1 if len(shape) >= 2 and ps.startswith("periods") else 0
+        if "/k" in ps or "/v" in ps or ps.endswith("k") or ps.endswith("v"):
+            # KV cache: (..., B, cap, n_kv, head_dim). GQA kv_heads rarely divide
+            # the model axis, so shard head_dim (decode contractions psum over it).
+            if shard_seq and len(shape) >= 3 and shape[-3] % data_size == 0:
+                parts[-3] = dp if len(dp) > 1 else dp[0]
+            elif shape[bdim] % data_size == 0:
+                parts[bdim] = dp if len(dp) > 1 else dp[0]
+            if (seq_over_model and len(shape) >= 3 and parts[-3] is None
+                    and shape[-3] % model_size == 0):
+                parts[-3] = "model"
+            elif shape[-2] % model_size == 0:
+                parts[-2] = "model"
+            elif shape[-1] % model_size == 0:
+                parts[-1] = "model"
+        else:
+            # SSM/conv/recurrent states: batch over DP, feature dim over model
+            if shape[bdim] % data_size == 0:
+                parts[bdim] = dp if len(dp) > 1 else dp[0]
+            if len(shape) - bdim >= 2 and shape[-1] % model_size == 0:
+                parts[-1] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, *, shard_seq: bool = False,
+                    seq_over_model: bool = False):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        cache_specs(cache_shapes, mesh, shard_seq=shard_seq,
+                    seq_over_model=seq_over_model))

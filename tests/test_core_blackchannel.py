@@ -1,0 +1,247 @@
+"""Black-Channel protocol tests (paper §III-B): deadlock preclusion, propagation,
+corrupted-communicator detection, simultaneous signalling, channel reuse."""
+import pytest
+
+from repro.core import (
+    ANY_SOURCE,
+    Comm,
+    CommCorruptedError,
+    ErrorCode,
+    PropagatedError,
+    TimeoutError_,
+    initialize,
+    run_ranks,
+)
+
+T = 20.0  # generous protocol timeout; tests fail fast on deadlock instead of hanging
+
+
+def _world(ctx):
+    return initialize(ctx, default_timeout=T).comm_world()
+
+
+def test_basic_send_recv():
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 0:
+            f = comm.send(42, dst=1)
+        else:
+            f = comm.recv(src=0)
+        out = f.wait()
+        return out
+
+    res = run_ranks(2, fn)
+    assert res[0].exception is None and res[1].exception is None
+    assert res[1].value == 42
+
+
+def test_propagation_releases_waiting_ranks():
+    """Paper's core claim: a local exception no longer deadlocks remote waits."""
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 0:
+            try:
+                raise ValueError("local failure on rank 0")  # local C++ exception
+            except ValueError:
+                with pytest.raises(PropagatedError):
+                    comm.signal_error(666)
+            return "signalled"
+        else:
+            # rank 1..n-1 block in a receive that will never be matched
+            f = comm.recv(src=0)
+            with pytest.raises(PropagatedError) as ei:
+                f.wait()
+            assert ei.value.errors[0].rank == 0
+            assert ei.value.errors[0].code == 666
+            return "released"
+
+    res = run_ranks(4, fn)
+    for r in res:
+        assert r.exception is None, r.exception
+    assert res[0].value == "signalled"
+    assert all(r.value == "released" for r in res[1:])
+
+
+def test_without_channel_deadlocks():
+    """Control experiment: the raw transport (no black channel) deadlocks — the
+    situation the paper's technique precludes."""
+    def fn(ctx):
+        if ctx.rank == 0:
+            return "rank0 threw and sent nothing"
+        req = ctx.irecv(ctx.world, 0, 0)
+        with pytest.raises(TimeoutError_):
+            ctx.wait(req, timeout=0.3)
+        return "timed out"
+
+    res = run_ranks(2, fn)
+    assert res[1].value == "timed out"
+
+
+def test_simultaneous_signalling():
+    """Two ranks signal at once (the reason the paper uses MPI_Issend)."""
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank in (0, 1):
+            with pytest.raises(PropagatedError) as ei:
+                comm.signal_error(100 + comm.rank)
+        else:
+            f = comm.recv(src=0)
+            with pytest.raises(PropagatedError) as ei:
+                f.wait()
+        errs = sorted((e.rank, e.code) for e in ei.value.errors)
+        return errs
+
+    res = run_ranks(6, fn)
+    expected = [(0, 100), (1, 101)]
+    for r in res:
+        assert r.exception is None, r.exception
+        assert r.value == expected, r.value
+
+
+def test_enumeration_order_and_codes():
+    """Every rank gets the full, identically-ordered (rank, code) table."""
+    signallers = {1: 7, 3: 9, 4: 11}
+
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank in signallers:
+            with pytest.raises(PropagatedError) as ei:
+                comm.signal_error(signallers[comm.rank])
+        else:
+            f = comm.recv(src=(comm.rank + 1) % comm.size)
+            with pytest.raises(PropagatedError) as ei:
+                f.wait()
+        return [(e.rank, e.code) for e in ei.value.errors]
+
+    res = run_ranks(6, fn)
+    expected = sorted((r, c) for r, c in signallers.items())
+    for r in res:
+        assert r.exception is None, r.exception
+        assert sorted(r.value) == expected
+        # paper's scan assigns indices in rank order → table is rank-ordered
+        assert r.value == expected
+
+
+def test_corrupted_communicator_on_unwinding():
+    """Exception escaping the Comm scope ⇒ every rank throws CommCorruptedError."""
+    def fn(ctx):
+        inst = initialize(ctx, default_timeout=T)
+        if ctx.rank == 0:
+            with pytest.raises(RuntimeError):
+                with inst.comm_world() as comm:
+                    raise RuntimeError("unwinding through comm scope")
+            return "unwound"
+        else:
+            with inst.comm_world() as comm:
+                f = comm.recv(src=0)
+                with pytest.raises(CommCorruptedError):
+                    f.wait()
+                return "corrupted observed"
+
+    res = run_ranks(3, fn)
+    for r in res:
+        assert r.exception is None, r.exception
+    assert res[0].value == "unwound"
+    assert res[1].value == "corrupted observed"
+
+
+def test_channel_reuse_after_propagated_error():
+    """A recoverable (propagated) error leaves the communicator usable — the paper:
+    'Reacting to these exceptions does not require to revoke and set up a new
+    communicator.'"""
+    def fn(ctx):
+        comm = _world(ctx)
+        # round 1: rank 0 signals
+        if comm.rank == 0:
+            with pytest.raises(PropagatedError):
+                comm.signal_error(5)
+        else:
+            f = comm.recv(src=0)
+            with pytest.raises(PropagatedError):
+                f.wait()
+        # round 2: normal communication must work again
+        if comm.rank == 0:
+            comm.send(99, dst=1).wait()
+            return "ok"
+        elif comm.rank == 1:
+            return comm.recv(src=0).wait()
+        return "ok"
+
+    def body(ctx):
+        out = fn(ctx)
+        return out
+
+    res = run_ranks(3, body)
+    for r in res:
+        assert r.exception is None, r.exception
+    assert res[1].value == 99
+
+
+def test_wait_sees_error_even_after_own_completion():
+    """Paper: after Waitany completes the user request, MPI_Test(err_req) still
+    detects a concurrent error signal."""
+    import threading
+
+    release = threading.Event()
+
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 0:
+            # complete a matched pair first, then signal
+            comm.send(1, dst=1).wait()
+            release.wait(timeout=T)
+            with pytest.raises(PropagatedError):
+                comm.signal_error(13)
+            return "signalled"
+        else:
+            f = comm.recv(src=0)
+            # ensure the message is already deliverable, then let rank 0 signal
+            while not f.test():
+                pass
+            release.set()
+            # wait() must still surface the error signalled after completion —
+            # via the barrier-joined error epoch on a subsequent wait
+            f.wait()  # completes fine (request already done, maybe no error yet)
+            g = comm.recv(src=0)
+            with pytest.raises(PropagatedError):
+                g.wait()
+            return "saw error"
+
+    res = run_ranks(2, fn)
+    for r in res:
+        assert r.exception is None, r.exception
+
+
+def test_cancel_semantics():
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 0:
+            f = comm.recv(src=1, tag=5)
+            assert f.cancel() is True  # unmatched: cancellable
+            comm.barrier()
+        else:
+            comm.barrier()
+        return "ok"
+
+    res = run_ranks(2, fn)
+    for r in res:
+        assert r.exception is None, r.exception
+
+
+@pytest.mark.parametrize("nranks", [2, 3, 8, 16])
+def test_scales_with_ranks(nranks):
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == nranks - 1:
+            with pytest.raises(PropagatedError) as ei:
+                comm.signal_error(1)
+        else:
+            f = comm.recv(src=(comm.rank + 1) % comm.size)
+            with pytest.raises(PropagatedError) as ei:
+                f.wait()
+        return [(e.rank, e.code) for e in ei.value.errors]
+
+    res = run_ranks(nranks, fn)
+    for r in res:
+        assert r.exception is None, r.exception
+        assert r.value == [(nranks - 1, 1)]

@@ -1,0 +1,163 @@
+"""ULFM protocol tests (paper §III-C): revoke/agree/shrink, hard-fault detection,
+corrupted-communicator semantics, and recovery by shrinking."""
+import pytest
+
+from repro.core import (
+    Comm,
+    CommCorruptedError,
+    ErrorCode,
+    PropagatedError,
+    RankFailedError,
+    RevokedError,
+    TimeoutError_,
+    initialize,
+    run_ranks,
+)
+
+T = 20.0
+
+
+def _world(ctx):
+    return initialize(ctx, default_timeout=T).comm_world()
+
+
+def test_signal_error_via_revoke():
+    """signal_error revokes; agree(1); shrink; enumeration — all ranks see it."""
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 0:
+            with pytest.raises(PropagatedError) as ei:
+                comm.signal_error(ErrorCode.USER)
+        else:
+            with pytest.raises(PropagatedError) as ei:
+                comm.recv(src=0).wait()
+        assert [(e.rank, e.code) for e in ei.value.errors] == [
+            (0, int(ErrorCode.USER))]
+        # after shrink the communicator is usable again (same membership)
+        assert comm.size == 4
+        comm.barrier()
+        return "ok"
+
+    res = run_ranks(4, fn, ulfm=True)
+    for r in res:
+        assert r.exception is None, r.exception
+        assert r.value == "ok"
+
+
+def test_hard_fault_detected_and_corrupts():
+    """Rank death (node loss) ⇒ survivors throw CommCorruptedError (paper: hard
+    failure implies corrupted communicator via agree=0)."""
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 2:
+            ctx.die()  # hard fault: process never returns
+        with pytest.raises(CommCorruptedError):
+            comm.recv(src=2).wait()
+        return "observed hard fault"
+
+    res = run_ranks(3, fn, ulfm=True)
+    assert res[2].killed
+    for r in res[:2]:
+        assert r.exception is None, r.exception
+        assert r.value == "observed hard fault"
+
+
+def test_shrink_recovery_after_hard_fault():
+    """Paper use case 1 (LFLR): survivors shrink and continue with fewer ranks."""
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank == 1:
+            ctx.die()
+        with pytest.raises(CommCorruptedError):
+            comm.recv(src=1).wait()
+        comm.shrink_to_survivors()
+        assert comm.size == 3
+        # prove the shrunk communicator works: ring send/recv among survivors
+        nxt = (comm.rank + 1) % comm.size
+        prv = (comm.rank - 1) % comm.size
+        fs = comm.send(comm.rank, dst=nxt)
+        fr = comm.recv(src=prv)
+        got = fr.wait()
+        fs.wait()
+        assert got == prv
+        return comm.size
+
+    res = run_ranks(4, fn, ulfm=True)
+    assert res[1].killed
+    for i in (0, 2, 3):
+        assert res[i].exception is None, res[i].exception
+        assert res[i].value == 3
+
+
+def test_revoked_error_on_plain_op():
+    """Operations on a revoked communicator fail with RevokedError at transport
+    level (MPI_ERR_COMM_REVOKED)."""
+    def fn(ctx):
+        if ctx.rank == 0:
+            ctx.revoke(ctx.world)
+            return "revoked"
+        # wait until the revocation lands, then try to use the world context
+        import time
+        for _ in range(100):
+            if ctx.world.revoked:
+                break
+            time.sleep(0.01)
+        with pytest.raises(RevokedError):
+            ctx.isend(ctx.world, 0, 0, "x")
+        return "saw revoked"
+
+    res = run_ranks(2, fn, ulfm=True)
+    for r in res:
+        assert r.exception is None, r.exception
+
+
+def test_corrupted_on_unwinding_ulfm():
+    """Destructor-during-unwinding under ULFM: revoke + agree(0) ⇒ everyone
+    throws CommCorruptedError."""
+    def fn(ctx):
+        inst = initialize(ctx, default_timeout=T)
+        if ctx.rank == 0:
+            with pytest.raises(RuntimeError):
+                with inst.comm_world() as comm:
+                    raise RuntimeError("boom")
+            return "unwound"
+        with inst.comm_world() as comm:
+            with pytest.raises(CommCorruptedError):
+                comm.recv(src=0).wait()
+            return "corrupted observed"
+
+    res = run_ranks(3, fn, ulfm=True)
+    for r in res:
+        assert r.exception is None, r.exception
+
+
+def test_agree_is_fault_tolerant():
+    """MPI_Comm_agree completes among survivors even when a rank dies mid-call."""
+    def fn(ctx):
+        if ctx.rank == 1:
+            ctx.die()
+        # survivors agree; the dead rank's contribution is excluded
+        out = ctx.agree(ctx.world, 1, timeout=T)
+        return out
+
+    res = run_ranks(3, fn, ulfm=True)
+    assert res[1].killed
+    assert res[0].value == 1 and res[2].value == 1
+
+
+def test_multiple_signallers_ulfm():
+    def fn(ctx):
+        comm = _world(ctx)
+        if comm.rank in (1, 2):
+            with pytest.raises(PropagatedError) as ei:
+                comm.signal_error(50 + comm.rank)
+        else:
+            with pytest.raises(PropagatedError) as ei:
+                comm.recv(src=1).wait()
+        return sorted((e.rank, e.code) for e in ei.value.errors)
+
+    res = run_ranks(5, fn, ulfm=True)
+    expected = [(1, 51), (2, 52)]
+    for r in res:
+        assert r.exception is None, r.exception
+        assert r.value == expected

@@ -1,0 +1,54 @@
+"""Elastic training over the multi-controller simulation: LFLR + shrink."""
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultSchedule, FaultSpec
+from repro.launch.elastic import elastic_train
+
+
+def test_fault_free_convergence():
+    res = elastic_train(4, steps=30, lr=0.2)
+    for r in res:
+        assert r.exception is None, r.exception
+        assert r.value.steps_done == 30
+        assert r.value.final_loss < 1e-2
+
+
+def test_soft_fault_propagates_and_all_skip():
+    faults = FaultSchedule([FaultSpec(step=5, kind="nan_grad", rank=2)])
+    res = elastic_train(4, steps=20, lr=0.2, faults=faults)
+    for r in res:
+        assert r.exception is None, r.exception
+        ev = [e for e in r.value.events if e[0] == "propagated"]
+        assert len(ev) == 1
+        assert ev[0][2] == [2]          # every rank learned *who* failed
+        assert r.value.final_loss < 1e-2  # and training still converged
+
+
+def test_hard_fault_shrinks_and_survivors_finish():
+    faults = FaultSchedule([FaultSpec(step=8, kind="kill", rank=1)])
+    res = elastic_train(4, steps=25, lr=0.2, faults=faults)
+    assert res[1].killed
+    for i in (0, 2, 3):
+        r = res[i]
+        assert r.exception is None, r.exception
+        ev = [e for e in r.value.events if e[0] == "shrink"]
+        assert len(ev) == 1 and ev[0][2] == 3   # world shrank 4 → 3
+        assert r.value.steps_done >= 1
+        assert r.value.world_sizes[-1] == 3
+        assert r.value.final_loss < 5e-2        # training recovered post-shrink
+    # survivors agree on the weights (consistent restored state)
+    w = [res[i].value.weights for i in (0, 2, 3)]
+    np.testing.assert_allclose(w[0], w[1], rtol=1e-6)
+    np.testing.assert_allclose(w[0], w[2], rtol=1e-6)
+
+
+def test_two_kills_two_shrinks():
+    faults = FaultSchedule([FaultSpec(step=6, kind="kill", rank=1),
+                            FaultSpec(step=14, kind="kill", rank=3)])
+    res = elastic_train(5, steps=20, lr=0.2, faults=faults)
+    assert res[1].killed and res[3].killed
+    for i in (0, 2, 4):
+        r = res[i]
+        assert r.exception is None, r.exception
+        assert r.value.world_sizes[-1] == 3     # 5 → 4 → 3

@@ -1,0 +1,131 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles, with
+shape/dtype sweeps (hypothesis for the fault probe's value-pattern space)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.errors import ErrorCode
+from repro.kernels.fault_probe.kernel import probe_rows
+from repro.kernels.fault_probe.ref import probe_array_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import sdpa_ref
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_assoc, rglru_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_chunked, ssd_naive_ref
+
+NF = int(ErrorCode.NONFINITE_GRAD)
+OV = int(ErrorCode.OVERFLOW)
+
+
+# ------------------------------------------------------------------ fault probe
+@pytest.mark.parametrize("rows,block_rows", [(256, 256), (512, 256), (1024, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fault_probe_clean(rows, block_rows, dtype):
+    x = jnp.ones((rows, 128), dtype)
+    w = probe_rows(x, jnp.asarray(1e4), nonfinite_code=NF, overflow_code=OV,
+                   block_rows=block_rows, interpret=True)
+    assert int(w) == 0
+
+
+@pytest.mark.parametrize("poison,expected", [
+    (jnp.nan, NF), (jnp.inf, NF), (-jnp.inf, NF), (1e6, OV), (-1e6, OV),
+])
+def test_fault_probe_detects(poison, expected):
+    x = jnp.ones((512, 128), jnp.float32).at[300, 77].set(poison)
+    w = probe_rows(x, jnp.asarray(1e4), nonfinite_code=NF, overflow_code=OV,
+                   block_rows=256, interpret=True)
+    assert int(w) == expected
+    ref = probe_array_ref(x, 1e4, nonfinite_code=NF, overflow_code=OV)
+    assert int(w) == int(ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 511), st.integers(0, 127),
+                          st.sampled_from(["nan", "inf", "big", "ok"])),
+                min_size=0, max_size=4))
+def test_fault_probe_property(faults):
+    """Kernel == oracle for arbitrary fault patterns (hypothesis)."""
+    x = np.ones((512, 128), np.float32)
+    for r, c, kind in faults:
+        x[r, c] = {"nan": np.nan, "inf": np.inf, "big": 9e5, "ok": 1.0}[kind]
+    xj = jnp.asarray(x)
+    w = probe_rows(xj, jnp.asarray(1e4), nonfinite_code=NF, overflow_code=OV,
+                   block_rows=256, interpret=True)
+    ref = probe_array_ref(xj, 1e4, nonfinite_code=NF, overflow_code=OV)
+    assert int(w) == int(ref)
+
+
+# -------------------------------------------------------------- flash attention
+FLASH_CASES = [
+    # (B, S, T, Hq, Hkv, D, causal, window, bq, bkv)
+    (1, 16, 16, 2, 2, 128, True, 0, 8, 8),
+    (2, 32, 32, 4, 2, 128, True, 0, 16, 16),     # GQA
+    (1, 32, 32, 4, 1, 128, True, 8, 16, 8),      # MQA + sliding window
+    (1, 24, 24, 2, 2, 128, False, 0, 8, 8),      # bidirectional (encoder)
+    (1, 20, 20, 2, 1, 128, True, 0, 8, 8),       # padding (S % bq != 0)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, S, T, Hq, Hkv, D, causal, window, bq, bkv = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_kv=bkv)
+    want = sdpa_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------- ssd scan
+SSD_CASES = [
+    # (b, s, h, p, g, n, chunk)
+    (1, 16, 2, 8, 1, 8, 8),
+    (2, 32, 4, 8, 2, 8, 8),
+    (1, 24, 2, 16, 1, 8, 8),
+    (1, 32, 2, 8, 1, 8, 16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_vs_naive(case):
+    b, s, h, p, g, n, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32) * 0.5
+    C = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, g, n),
+                          jnp.float32) * 0.5
+    got = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    naive = ssd_naive_ref(x, dt, A, B, C)
+    chunked = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(naive),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- rglru scan
+@pytest.mark.parametrize("B,S,W,blk", [(1, 16, 128, 128), (2, 32, 256, 128),
+                                       (1, 64, 128, 64)])
+def test_rglru_kernel_vs_refs(B, S, W, blk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (B, S, W), jnp.float32)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, W), jnp.float32))
+    got = rglru_scan(x, log_a, block_w=blk)
+    seq = rglru_scan_ref(x, log_a)
+    assoc = rglru_scan_assoc(x, log_a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(seq),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(assoc), np.asarray(seq),
+                               rtol=1e-5, atol=1e-5)

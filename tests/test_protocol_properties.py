@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) for the protocol invariants the paper's
+correctness rests on:
+
+P1  agreement: after any set of simultaneous signallers, every rank observes the
+    *identical, rank-ordered* (rank, code) table — black channel AND ULFM.
+P2  deadlock preclusion: no rank blocks forever regardless of who signals while
+    others wait.
+P3  enumeration oracle: the device-channel shard-map port equals the pure-jnp
+    oracle for arbitrary word vectors (covered at 8 devices in
+    test_core_device_channel; here the jnp oracle itself is property-tested
+    against a python reference).
+P4  survivor consistency: any kill set under ULFM leaves all survivors with the
+    same shrunk membership.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CommCorruptedError,
+    PropagatedError,
+    decode_table,
+    enumerate_errors_ref,
+    initialize,
+    run_ranks,
+)
+
+T = 30.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_p1_agreement_blackchannel(data):
+    nranks = data.draw(st.integers(2, 8), label="nranks")
+    signallers = data.draw(
+        st.dictionaries(st.integers(0, nranks - 1), st.integers(1, 1000),
+                        min_size=1, max_size=nranks), label="signallers")
+
+    def fn(ctx):
+        comm = initialize(ctx, default_timeout=T).comm_world()
+        try:
+            if comm.rank in signallers:
+                comm.signal_error(signallers[comm.rank])
+            else:
+                comm.recv(src=(comm.rank + 1) % comm.size).wait()
+        except PropagatedError as e:
+            return [(x.rank, x.code) for x in e.errors]
+        return None
+
+    res = run_ranks(nranks, fn, join_timeout=T * 3)
+    expected = sorted((r, c) for r, c in signallers.items())
+    for r in res:
+        assert r.exception is None, (r.rank, r.exception)
+        assert r.value == expected      # identical AND rank-ordered (P1)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_p1_p4_ulfm_with_kills(data):
+    nranks = data.draw(st.integers(3, 7), label="nranks")
+    victim = data.draw(st.integers(1, nranks - 1), label="victim")
+
+    def fn(ctx):
+        comm = initialize(ctx, default_timeout=T).comm_world()
+        if comm.rank == victim:
+            ctx.die()
+        try:
+            comm.recv(src=victim).wait()
+        except CommCorruptedError:
+            comm.shrink_to_survivors()
+            return comm.size
+        return None
+
+    res = run_ranks(nranks, fn, ulfm=True, join_timeout=T * 3)
+    assert res[victim].killed
+    sizes = {r.value for r in res if not r.killed and r.exception is None}
+    assert sizes == {nranks - 1}        # all survivors agree (P4)
+    assert all(r.exception is None for r in res if not r.killed)  # (P2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=24))
+def test_p3_enumeration_oracle(words):
+    """jnp oracle vs straight-python reference for arbitrary word vectors."""
+    arr = jnp.asarray(np.asarray(words, np.uint32))
+    count, table = enumerate_errors_ref(arr, max_errors=8)
+    got = [(e.rank, e.code) for e in decode_table(int(count), np.asarray(table))]
+    expect = [(i, w) for i, w in enumerate(words) if w != 0][:8]
+    assert int(count) == sum(1 for w in words if w)
+    assert got == expect
