@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV:
   * beyond paper      -> detection_overhead (in-band device channel cost)
   * recovery costs    -> LFLR vs optimizer-reset vs rollback vs buddy store
   * roofline bounds   -> per-cell dominant-term bound from dry-run artifacts
+  * serving           -> repro.serve steady-state tokens/s + latency
+                         percentiles, clean vs injected-fault traffic
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ import sys
 
 def main() -> None:
     from . import (detection_overhead, error_propagation, recovery,
-                   roofline_table, transport_latency)
+                   roofline_table, serving, transport_latency)
 
     print("name,us_per_call,derived")
     sections = [
@@ -23,6 +25,7 @@ def main() -> None:
         ("detection_overhead", detection_overhead.run),
         ("recovery", recovery.run),
         ("roofline", roofline_table.run),
+        ("serving", serving.run),
     ]
     for name, fn in sections:
         try:

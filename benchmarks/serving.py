@@ -1,0 +1,64 @@
+"""Serving benchmark: steady-state throughput + request latency percentiles,
+with and without injected soft faults.
+
+Rows (name, derived, us):
+  * serve_steady_*  — fault-free continuous batching;
+  * serve_faulted_* — one injected recurrent-state SDC per ``FAULT_EVERY``
+    completed requests (scaled-down stand-in for a per-100-requests rate at
+    production traffic), so the number shows what LFLR recompute costs the
+    steady state.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import smoke_config
+from repro.serve import Replica, Request
+
+N_REQUESTS = 20
+MAX_NEW = 8
+NUM_SLOTS = 4
+FAULT_EVERY = 5     # 1 injected fault per FAULT_EVERY completed requests
+
+
+def _serve_once(fault_every: int = 0):
+    cfg = smoke_config("recurrentgemma-2b")
+    rep = Replica(cfg, num_slots=NUM_SLOTS, max_len=48)
+    for i in range(N_REQUESTS):
+        rej = rep.submit(Request(id=i, prompt=(3 + i, 5 + i, 7 + i),
+                                 max_new_tokens=MAX_NEW))
+        assert rej is None, rej
+    # warm the compiles outside the timed region: first step prefills + decodes
+    rep.step()
+    warm_tokens = rep.metrics.decode_tokens
+    t0 = time.monotonic()
+    done = 0
+    injected = 0
+    while not rep.idle():
+        out = rep.step()
+        done += len(out)
+        if fault_every and done // fault_every > injected:
+            if rep.inject_state_fault() is not None:
+                injected += 1
+    wall = time.monotonic() - t0
+    summary = rep.metrics.summary()
+    assert summary["statuses"].get("ok") == N_REQUESTS, summary["statuses"]
+    summary["timed_tokens"] = summary["decode_tokens"] - warm_tokens
+    return summary, wall, injected
+
+
+def run():
+    rows = []
+    for label, fault_every in (("steady", 0), ("faulted", FAULT_EVERY)):
+        s, wall, injected = _serve_once(fault_every)
+        tps = s["timed_tokens"] / wall if wall > 0 else 0.0
+        us_per_tok = wall * 1e6 / max(s["timed_tokens"], 1)
+        note = (f"{injected}_faults_recovered" if fault_every
+                else f"{N_REQUESTS}req_x_{MAX_NEW}tok")
+        rows.append((f"serve_{label}_tokens_per_s", f"{tps:.0f}tok/s {note}",
+                     us_per_tok))
+        for p in ("p50", "p99"):
+            lat = s[f"latency_{p}_s"]
+            rows.append((f"serve_{label}_latency_{p}",
+                         f"{lat * 1e3:.1f}ms", lat * 1e6))
+    return rows

@@ -1,0 +1,8 @@
+"""Root conftest: make the src-layout package importable without installation,
+so a bare ``python -m pytest -x -q`` works (no ``PYTHONPATH=src`` needed)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

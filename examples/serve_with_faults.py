@@ -1,83 +1,84 @@
-"""Serving demo: batched decode with the in-band channel guarding generation.
+"""Serving demo on the ``repro.serve`` subsystem: continuous batching with the
+paper's fault machinery fused in.
 
     PYTHONPATH=src python examples/serve_with_faults.py
 
-Prefills a small batch of prompts on a reduced recurrentgemma (hybrid RG-LRU +
-local attention — O(1) state per token), then decodes with the jitted
-serve step. Midway we corrupt the recurrent state (a simulated SDC bit-flip in
-the SSM-state — the paper's soft-fault class); the DeviceFuture raises
-PropagatedError(STATE_FAULT), and the serving loop recovers by re-prefilling
-the affected sequences (LFLR for inference: recompute, don't restart).
+Act 1 — one replica, a soft fault. A :class:`Replica` continuously batches
+requests over the fused slot-decode step (reduced recurrentgemma: hybrid
+RG-LRU + local attention, O(1) state per token). Midway we flip a bit of one
+sequence's recurrent state (a simulated SDC — the paper's soft-fault class).
+The ``DeviceFuture`` raises ``PropagatedError`` whose per-slot enumeration
+names the poisoned *slot*; the replica re-prefills just that sequence (LFLR:
+recompute, don't restart) while its batch-mates keep decoding.
+
+Act 2 — a replica fleet, a hard fault. A :class:`ServeGroup` of three
+replicas serves a request stream; we kill one replica mid-flight. Survivors'
+next health exchange raises (ULFM revoke → agree), they shrink 3 → 2 and
+re-route the dead replica's unanswered requests — every accepted request is
+answered, nothing deadlocks, nothing aborts.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-
 from repro.configs import smoke_config  # noqa: E402
-from repro.core import DeviceFuture, PropagatedError  # noqa: E402
-from repro.launch.steps import make_decode_step  # noqa: E402
-from repro.models import build_model  # noqa: E402
+from repro.core.faults import FaultSchedule, FaultSpec  # noqa: E402
+from repro.serve import Replica, Request, ServeGroup  # noqa: E402
+
+
+def act1_soft_fault(cfg):
+    print("=== Act 1: per-sequence LFLR on a single replica ===")
+    replica = Replica(cfg, num_slots=4, max_len=48)
+    for i in range(6):      # 6 requests onto 4 slots: backfill is exercised
+        rej = replica.submit(Request(id=i, prompt=(11 + i, 22 + i, 33 + i),
+                                     max_new_tokens=8))
+        assert rej is None, rej
+    responses, steps = [], 0
+    while not replica.idle():
+        if steps == 5:
+            slot = replica.inject_state_fault()
+            print(f"step 5: injected NaN into slot {slot}'s recurrent state "
+                  "(simulated SDC)")
+        responses.extend(replica.step())
+        steps += 1
+    for r in sorted(responses, key=lambda r: r.id):
+        print(f"  request {r.id}: {r.status}, tokens={list(r.tokens)}, "
+              f"retries={r.retries}")
+    s = replica.metrics.summary()
+    print(f"  faults seen: {s['faults']}  |  {s['tokens_per_s']:.0f} tok/s, "
+          f"p50 latency {s['latency_p50_s'] * 1e3:.0f} ms")
+    print()
+
+
+def act2_hard_fault(cfg):
+    print("=== Act 2: replica kill -> shrink + re-route on a ServeGroup ===")
+    group = ServeGroup(cfg, 3, num_slots=2, max_len=48)
+    requests = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=6)
+                for i in range(9)]
+    result = group.serve(requests, faults=FaultSchedule(
+        [FaultSpec(step=2, kind="kill", rank=1)]))
+    print(f"  killed replicas: {[r.rank for r in result.reports if r.killed]}")
+    print(f"  re-routed requests: {list(result.rerouted)}")
+    for rank in (0, 2):
+        report = result.report(rank)
+        print(f"  rank {rank} events: {report.events}")
+    answered = {i: r.status for i, r in sorted(result.responses.items())}
+    by_replica = {}
+    for r in result.responses.values():
+        by_replica.setdefault(r.replica, 0)
+        by_replica[r.replica] += 1
+    print(f"  statuses: {answered}")
+    print(f"  answered per replica: {by_replica}")
+    assert all(r.ok for r in result.responses.values())
+    print("  all accepted requests answered despite the kill — no deadlock, "
+          "no abort")
 
 
 def main():
     cfg = smoke_config("recurrentgemma-2b")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    B, prompt_len, gen_len = 4, 8, 12
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len), 0,
-                                 cfg.vocab_size)
-
-    decode = jax.jit(make_decode_step(cfg))
-
-    def prefill_via_decode():
-        cache = model.init_cache(B, 64)
-        tok = prompts[:, :1]
-        for pos in range(prompt_len):
-            logits, cache, word = decode(params, cache, prompts[:, pos:pos+1],
-                                         jnp.int32(pos))
-        return cache, logits
-
-    cache, logits = prefill_via_decode()
-    print(f"prefilled {B} prompts of {prompt_len} tokens ({cfg.name})")
-
-    generated = []
-    pos = prompt_len
-    steps = 0
-    injected = False
-    while steps < gen_len:
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        if steps == 5 and not injected:
-            injected = True
-            # SDC injection: NaN the RG-LRU hidden state of one sequence (once)
-            def poison(path, leaf):
-                keys = [getattr(k, "key", None) for k in path]
-                if "h" in keys and leaf.ndim >= 2:
-                    return leaf.at[(0,) * (leaf.ndim - 1) + (0,)].set(jnp.nan)
-                return leaf
-            cache = jax.tree_util.tree_map_with_path(poison, cache)
-            print("step 5: injected NaN into recurrent state (simulated SDC)")
-        logits_new, cache_new, word = decode(params, cache, tok, jnp.int32(pos))
-        fut = DeviceFuture(outputs=(logits_new, cache_new), word=word)
-        try:
-            logits, cache = fut.wait()
-            generated.append(int(tok[0, 0]))
-            pos += 1
-            steps += 1
-        except PropagatedError as e:
-            print(f"step {steps}: caught {e} -> LFLR: re-prefill (recompute "
-                  "state from the prompt + generated tokens)")
-            cache, logits = prefill_via_decode()
-            # replay already-generated tokens to rebuild state
-            pos = prompt_len
-            for t in generated:
-                tokr = jnp.full((B, 1), t, jnp.int32)
-                logits, cache, _ = decode(params, cache, tokr, jnp.int32(pos))
-                pos += 1
-    print(f"generated {steps} tokens/seq after recovery; "
-          f"first sequence: {generated}")
+    print(f"serving a reduced {cfg.name} ({cfg.num_layers} layers)\n")
+    act1_soft_fault(cfg)
+    act2_hard_fault(cfg)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Local CI gate: tier-1 tests + serving smoke.
+#
+#   scripts/check.sh             # full suite + smoke
+#   scripts/check.sh -k serve    # pass pytest args through
+#
+# Runs both stages even if the first fails, then exits nonzero if either did.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+
+echo "== tier-1: python -m pytest -q $* =="
+python -m pytest -q "$@" || status=1
+
+echo
+echo "== serve smoke: examples/serve_with_faults.py =="
+if python examples/serve_with_faults.py > /dev/null; then
+    echo "serve smoke: OK"
+else
+    echo "serve smoke: FAILED"
+    status=1
+fi
+
+exit $status

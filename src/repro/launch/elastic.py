@@ -1,6 +1,6 @@
 """Elastic scaling: continue training after losing ranks/devices.
 
-Two layers, matching DESIGN.md §2:
+Two layers, matching the executor layer of the DESIGN.md §2 layer map:
 
 1. **Single-controller re-mesh** (``shrink_remesh``): after a (simulated) device
    loss, rebuild a smaller mesh, re-derive shardings from the same logical rules

@@ -201,6 +201,65 @@ def make_decode_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
     return decode_step
 
 
+def make_slot_decode_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
+    """Per-slot decode for continuous batching (``repro.serve``).
+
+    vmap of the single-sequence decode step over a leading *slot* axis, so every
+    slot carries its own absolute position — the shape continuous batching
+    needs, since slots join and leave the batch at different offsets:
+
+      params                      shared across slots (in_axes=None)
+      caches  pytree, leaves (S, ...)  stack of per-sequence (batch=1) caches
+      tokens  (S, 1, 1) int32
+      pos     (S,) int32               per-slot absolute position
+
+    Returns ``(logits (S, 1, 1, V), new caches, error words (S,))``. The word
+    is *per slot* (slots are independent under vmap), which is what makes
+    per-sequence LFLR possible: the serve replica runs the word vector through
+    the paper's enumeration algorithm (``core/device_channel.py``) so the
+    resulting ``PropagatedError`` carries exact ``(slot, code)`` pairs instead
+    of one blurred word for the whole batch.
+
+    The per-slot body IS ``make_decode_step(cfg)`` — sharing it is what makes
+    the serving LFLR recompute (prefill via the scalar decode step) reproduce
+    the batched trajectory exactly.
+    """
+    return jax.vmap(make_decode_step(cfg, probe_cfg),
+                    in_axes=(None, 0, 0, 0))
+
+
+def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
+    """Cache-producing prefill built by reusing the decode step.
+
+    Returns ``prefill(params, tokens, max_len, start_pos=0)`` for ``tokens``
+    of shape (B, S) → ``(last-position logits, cache, combined error word)``.
+
+    This is the recompute path of serving LFLR: re-running it over
+    prompt + generated tokens rebuilds a poisoned sequence's state exactly
+    (greedy decode is deterministic), so recovery never restarts the request.
+    The decode step is reused token-by-token — exact at small scale; a fused
+    chunked prefill is a later scaling PR (see DESIGN.md §3).
+    """
+    model = build_model(cfg)
+    step = jax.jit(make_decode_step(cfg, probe_cfg))
+
+    def prefill(params, tokens, max_len: int, start_pos: int = 0):
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim != 2 or tokens.shape[1] == 0:
+            raise ValueError(f"tokens must be (B, S>0), got {tokens.shape}")
+        _, S = tokens.shape
+        cache = model.init_cache(tokens.shape[0], max_len)
+        word = jnp.uint32(0)
+        logits = None
+        for i in range(S):
+            logits, cache, w = step(params, cache, tokens[:, i:i + 1],
+                                    jnp.int32(start_pos + i))
+            word = word | w
+        return logits, cache, word
+
+    return prefill
+
+
 def _recurrent_states(cache) -> list:
     out = []
 

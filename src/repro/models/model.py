@@ -142,8 +142,9 @@ class Model:
     def prefill(self, params, tokens, *, img_embeds=None, impl: str = "auto"):
         """Prefill returning logits only (the prefill_32k cells lower this).
 
-        Cache-producing prefill for interactive serving is in
-        ``launch/serve.py`` (decode-loop based; exact, small-scale).
+        Cache-producing prefill for interactive serving is
+        ``launch.steps.make_cache_prefill`` (decode-loop based; exact,
+        small-scale), driven by the ``repro.serve`` subsystem.
         """
         return self.forward(params, tokens, img_embeds=img_embeds, impl=impl)
 

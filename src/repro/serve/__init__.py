@@ -1,0 +1,34 @@
+"""repro.serve — fault-tolerant continuous-batching inference.
+
+The serving layer of the stack (DESIGN.md §2/§3): it applies the paper's
+contract — local errors, asynchrony and hard faults become *catchable
+exceptions* at a wait, never deadlocks or aborts — to inference traffic.
+
+* :class:`RequestQueue` / :class:`AdmissionPolicy` — deadline-aware (EDF)
+  admission; every accepted request gets a terminal :class:`Response`.
+* :class:`ContinuousBatchingScheduler` — fixed decode slots, per-step evict +
+  backfill over :func:`repro.launch.steps.make_slot_decode_step`.
+* :class:`Replica` — wraps every fused step in a ``DeviceFuture``; per-slot
+  error words + the paper's enumeration give ``(slot, code)`` attribution, so
+  ``STATE_FAULT`` triggers per-sequence LFLR re-prefill (recompute, don't
+  restart) and a :class:`~repro.core.recovery.RecoveryPolicy` escalates.
+* :class:`ServeGroup` — N replicas over the thread-rank transport; a killed
+  replica raises on the survivors via the ULFM protocol, the group shrinks and
+  re-routes its in-flight requests.
+* :class:`ServeMetrics` — latency percentiles, tokens/s, fault counters, and
+  an ``EventLog`` export matching the training executor's records.
+"""
+from .group import GroupResult, RankReport, ServeGroup  # noqa: F401
+from .metrics import FaultRecord, ServeMetrics  # noqa: F401
+from .queue import (  # noqa: F401
+    EXPIRED,
+    FAILED,
+    OK,
+    REJECTED,
+    AdmissionPolicy,
+    Request,
+    RequestQueue,
+    Response,
+)
+from .replica import Replica  # noqa: F401
+from .scheduler import ContinuousBatchingScheduler, Slot  # noqa: F401

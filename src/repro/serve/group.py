@@ -1,0 +1,226 @@
+"""ServeGroup: N replicas on the thread-rank transport, ULFM fault handling.
+
+Each rank thread owns one :class:`~repro.serve.replica.Replica` and serves its
+share of the request ledger. Every round the ranks exchange health + remaining
+load through a fault-aware ``Comm.all_reduce`` — the same choke point the
+paper routes everything through: the wait either returns the reduction or
+raises the unified exceptions.
+
+Hard fault choreography (the acceptance scenario of ISSUE 1):
+
+1. a replica dies (``Transport.kill`` / ``ctx.die`` — simulated node loss);
+2. survivors' next health exchange fails; the ULFM protocol revokes, agrees,
+   and every survivor raises ``CommCorruptedError`` — *no deadlock*: nobody
+   waits on the dead rank;
+3. survivors ``shrink_to_survivors`` and re-route: the ledger deterministically
+   reassigns the dead rank's unanswered requests across survivors
+   (``id % n_survivors`` over the sorted survivor list — no extra communication
+   needed, in the spirit of non-collective communicator reparation
+   [arXiv 2209.01849]), and serving continues without a global restart
+   [arXiv 2212.08755];
+4. re-routed requests are recomputed from their prompts on the new owner —
+   accepted requests are *answered*, never dropped.
+
+Soft faults stay replica-local (per-sequence LFLR inside ``Replica``); the
+group only learns about them through metrics.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+
+from ..core import CommCorruptedError, PropagatedError, initialize, run_ranks
+from ..core.faults import FaultSchedule
+from ..core.transport import RankResult
+from ..launch.steps import make_cache_prefill, make_slot_decode_step
+from ..models import build_model
+from .metrics import ServeMetrics
+from .queue import AdmissionPolicy, Request, RequestQueue, Response
+from .replica import SERVE_PROBES, Replica
+
+
+class _Ledger:
+    """Shared (thread-safe) request ledger: assignment, completion, re-route.
+
+    This plays the role of the front-end router's durable request log — the
+    piece a production deployment keeps outside the serving fleet so that a
+    replica loss can never lose an accepted request.
+    """
+
+    def __init__(self, requests: Sequence[Request], ranks: Sequence[int]):
+        self._lock = threading.Lock()
+        self.requests = {r.id: r for r in requests}
+        if len(self.requests) != len(requests):
+            raise ValueError("duplicate request ids")
+        self.alive = sorted(ranks)
+        self.pending: dict[int, deque[Request]] = {r: deque() for r in ranks}
+        self.owner: dict[int, int] = {}
+        self.responses: dict[int, Response] = {}
+        self.rerouted: list[int] = []
+        for i, req in enumerate(requests):
+            rank = self.alive[i % len(self.alive)]
+            self.pending[rank].append(req)
+            self.owner[req.id] = rank
+
+    def take(self, rank: int) -> list[Request]:
+        with self._lock:
+            q = self.pending.get(rank)
+            out = list(q) if q else []
+            if q:
+                q.clear()
+            return out
+
+    def complete(self, resp: Response) -> None:
+        with self._lock:
+            # first terminal answer wins (re-routes cannot produce duplicates,
+            # but keep the invariant explicit)
+            self.responses.setdefault(resp.id, resp)
+
+    def remaining(self) -> int:
+        with self._lock:
+            return len(self.requests) - len(self.responses)
+
+    def on_shrink(self, survivors: Sequence[int]) -> list[int]:
+        """Reassign unanswered requests owned by dead ranks. Idempotent: the
+        first survivor to observe a given membership performs the re-route."""
+        with self._lock:
+            survivors = sorted(survivors)
+            if survivors == self.alive:
+                return []
+            dead = set(self.alive) - set(survivors)
+            self.alive = survivors
+            moved = []
+            for d in dead:
+                self.pending.get(d, deque()).clear()
+            for rid, owner in list(self.owner.items()):
+                if owner in dead and rid not in self.responses:
+                    new = survivors[rid % len(survivors)]
+                    self.owner[rid] = new
+                    req = self.requests[rid]
+                    # the new owner recomputes from scratch: retries consumed
+                    # on the dead replica don't count against it (arrival_t is
+                    # kept, so latency still spans the recovery)
+                    req.retries = 0
+                    self.pending[new].append(req)
+                    moved.append(rid)
+            self.rerouted.extend(moved)
+            return moved
+
+
+@dataclass
+class RankReport:
+    rank: int
+    rounds: int = 0
+    events: list = field(default_factory=list)   # ("shrink"|"propagated", round, info)
+    metrics: Optional[ServeMetrics] = None
+
+
+@dataclass
+class GroupResult:
+    responses: dict[int, Response]
+    reports: list[RankResult]                    # raw per-rank harness results
+    rerouted: tuple[int, ...] = ()
+
+    @property
+    def ok(self) -> dict[int, Response]:
+        return {i: r for i, r in self.responses.items() if r.ok}
+
+    def report(self, rank: int) -> Optional[RankReport]:
+        rr = self.reports[rank]
+        return rr.value if rr.exception is None and not rr.killed else None
+
+
+class ServeGroup:
+    """A fleet of serving replicas over the simulated multi-rank runtime."""
+
+    def __init__(self, cfg, nranks: int, *, num_slots: int = 2,
+                 max_len: int = 64, seed: int = 0, probe_cfg=SERVE_PROBES,
+                 max_request_retries: int = 2, eos_id: Optional[int] = None,
+                 timeout: float = 30.0):
+        if nranks < 2:
+            raise ValueError("a ServeGroup needs >= 2 replicas")
+        self.cfg = cfg
+        self.nranks = nranks
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.timeout = timeout
+        self.max_request_retries = max_request_retries
+        self.eos_id = eos_id
+        self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
+        # compile once, share across rank threads (jit dispatch is thread-safe)
+        self._decode_fn = jax.jit(make_slot_decode_step(cfg, probe_cfg))
+        self._prefill_fn = make_cache_prefill(cfg, probe_cfg)
+
+    def serve(self, requests: Sequence[Request], *,
+              faults: FaultSchedule | None = None,
+              max_rounds: int = 10_000) -> GroupResult:
+        """Serve ``requests`` to completion across the group.
+
+        ``faults`` uses :class:`FaultSpec` with ``step`` meaning the serving
+        *round*: ``kind="kill"`` hard-kills a replica at the top of that round;
+        ``kind="state_nan"`` flips a bit in one of its active sequences.
+        Returns once every request has a terminal response on the survivors.
+        """
+        faults = faults or FaultSchedule()
+        ledger = _Ledger(requests, list(range(self.nranks)))
+
+        def rank_fn(ctx):
+            inst = initialize(ctx, default_timeout=self.timeout)
+            comm = inst.comm_world()
+            queue = RequestQueue(AdmissionPolicy(
+                max_queue=10_000, max_total_len=self.max_len))
+            replica = Replica(
+                self.cfg, params=self.params, num_slots=self.num_slots,
+                max_len=self.max_len, queue=queue, rank=ctx.rank,
+                max_request_retries=self.max_request_retries,
+                eos_id=self.eos_id,
+                decode_fn=self._decode_fn, prefill_fn=self._prefill_fn)
+            report = RankReport(rank=ctx.rank, metrics=replica.metrics)
+            for round_i in range(max_rounds):
+                for spec in faults.at(round_i, ctx.rank):
+                    if spec.kind == "kill":
+                        ctx.die()                       # never returns
+                    elif spec.kind == "state_nan":
+                        slot = replica.inject_state_fault()
+                        if slot is not None:
+                            report.events.append(("inject", round_i, slot))
+                for req in ledger.take(ctx.rank):
+                    rej = replica.submit(req)
+                    if rej is not None:
+                        ledger.complete(rej)
+                for resp in replica.step():
+                    ledger.complete(resp)
+                report.rounds = round_i + 1
+                # fault-aware health/termination exchange: the one wait that
+                # either agrees on progress or raises the paper's exceptions
+                try:
+                    rem = comm.all_reduce(ledger.remaining(), op="max").wait()
+                    if rem == 0:
+                        break
+                except PropagatedError as exc:
+                    report.events.append(
+                        ("propagated", round_i,
+                         [e.rank for e in exc.errors]))
+                    continue
+                except CommCorruptedError:
+                    comm.shrink_to_survivors()
+                    survivors = list(comm.context.members)
+                    moved = ledger.on_shrink(survivors)
+                    report.events.append(("shrink", round_i, len(survivors)))
+                    if moved:
+                        report.events.append(("reroute", round_i, moved))
+                    continue
+            else:
+                raise RuntimeError(
+                    f"rank {ctx.rank}: no global progress in {max_rounds} rounds "
+                    f"({ledger.remaining()} requests unanswered)")
+            return report
+
+        results = run_ranks(self.nranks, rank_fn, ulfm=True,
+                            join_timeout=self.timeout * 4)
+        return GroupResult(responses=dict(ledger.responses), reports=results,
+                           rerouted=tuple(ledger.rerouted))

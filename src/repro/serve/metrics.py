@@ -1,0 +1,132 @@
+"""Serving metrics: per-request latency, throughput, fault counters.
+
+Feeds the same :class:`~repro.core.resilient.EventLog` record the training
+executor uses, so one post-mortem tool reads both training and serving runs.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.errors import ErrorCode
+from ..core.resilient import Event, EventLog
+from .queue import OK, Response
+
+
+@dataclass
+class FaultRecord:
+    step: int
+    code: int
+    action: str
+    slots: tuple[int, ...] = ()
+
+
+class ServeMetrics:
+    """Thread-safe accumulator for one replica (or a whole group)."""
+
+    def __init__(self, clock=time.monotonic):
+        self._lock = threading.Lock()
+        self.clock = clock
+        self.responses: list[Response] = []
+        self.faults: list[FaultRecord] = []
+        self.decode_steps = 0
+        self.prefills = 0
+        self.decode_tokens = 0               # all committed tokens (incl. the
+        self._t0: Optional[float] = None     # first one, from prefill logits)
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- recording
+    def record_step(self, committed_tokens: int) -> None:
+        with self._lock:
+            self._tick()
+            self.decode_steps += 1
+            self.decode_tokens += committed_tokens
+
+    def record_prefill(self, committed_tokens: int = 1) -> None:
+        """A (re-)prefill that committed its first token from prefill logits."""
+        with self._lock:
+            self._tick()
+            self.prefills += 1
+            self.decode_tokens += committed_tokens
+
+    def _tick(self) -> None:
+        now = self.clock()
+        if self._t0 is None:
+            self._t0 = now
+        self._t_last = now
+
+    def record_response(self, resp: Response) -> None:
+        with self._lock:
+            self.responses.append(resp)
+
+    def record_fault(self, step: int, code: int | ErrorCode, action: str,
+                     slots: tuple[int, ...] = ()) -> None:
+        with self._lock:
+            self.faults.append(FaultRecord(step, int(code), action, slots))
+
+    # --------------------------------------------------------------- queries
+    def by_status(self) -> dict[str, int]:
+        with self._lock:
+            out: dict[str, int] = {}
+            for r in self.responses:
+                out[r.status] = out.get(r.status, 0) + 1
+            return out
+
+    def fault_counts(self) -> dict[str, int]:
+        """Faults keyed by ErrorCode class name (a combined word may count
+        several classes)."""
+        with self._lock:
+            out: dict[str, int] = {}
+            for f in self.faults:
+                for cls in ErrorCode(f.code).classes() or [ErrorCode.OK]:
+                    out[cls.name] = out.get(cls.name, 0) + 1
+            return out
+
+    def tokens_per_s(self) -> float:
+        with self._lock:
+            if self._t0 is None or self._t_last is None or self._t_last <= self._t0:
+                return 0.0
+            return self.decode_tokens / (self._t_last - self._t0)
+
+    def latency_percentiles(self, ps=(50, 99)) -> dict[str, float]:
+        with self._lock:
+            lats = [r.latency_s for r in self.responses if r.status == OK]
+        if not lats:
+            return {f"p{p}": float("nan") for p in ps}
+        arr = np.asarray(lats)
+        return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+    def summary(self) -> dict:
+        out = {
+            "requests": len(self.responses),
+            "statuses": self.by_status(),
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "decode_tokens": self.decode_tokens,
+            "tokens_per_s": self.tokens_per_s(),
+            "faults": self.fault_counts(),
+            "retries": sum(r.retries for r in self.responses),
+        }
+        out.update({f"latency_{k}_s": v
+                    for k, v in self.latency_percentiles().items()})
+        return out
+
+    # --------------------------------------------------------------- export
+    def to_event_log(self) -> EventLog:
+        """EventLog-style record: requests as ok/fault events, faults with the
+        recovery action taken — same shape the training executor emits."""
+        log = EventLog()
+        with self._lock:
+            for f in self.faults:
+                log.add(Event(step=f.step, kind="fault", code=f.code,
+                              action=f.action,
+                              detail=f"slots={list(f.slots)}"))
+            for i, r in enumerate(self.responses):
+                log.add(Event(step=i, kind="ok" if r.status == OK else "fault",
+                              detail=f"request {r.id}: {r.status}",
+                              duration_s=r.latency_s))
+        return log

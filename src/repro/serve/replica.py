@@ -1,0 +1,295 @@
+"""Serving replica: fused slot-decode behind a DeviceFuture, per-sequence LFLR.
+
+One replica owns a fixed-slot continuous batch over
+:func:`~repro.launch.steps.make_slot_decode_step`. Every dispatched step is
+wrapped in a :class:`~repro.core.device_channel.DeviceFuture`; the per-slot
+error words run through the paper's enumeration algorithm so the
+``PropagatedError`` raised at the wait carries exact ``(slot, code)`` pairs.
+
+Recovery is the paper's use-case 1 applied to inference:
+
+* ``STATE_FAULT`` (bit-flipped recurrent state) or non-finite logits on slot
+  *i* → **LFLR re-prefill**: recompute slot *i*'s cache from its prompt +
+  already-generated tokens (greedy decode is deterministic, so this recreates
+  the pre-fault trajectory exactly) — the other slots commit their tokens and
+  never notice;
+* the :class:`~repro.core.recovery.RecoveryPolicy` escalates: repeated faults
+  inside its window recompute *every* lane (the rollback analogue), and a
+  request that re-faults past ``max_request_retries`` is answered ``FAILED``
+  (the serving ABORT — one poisoned request must not wedge the replica).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.detect import ProbeConfig
+from ..core.device_channel import WORD_DTYPE, DeviceFuture
+from ..core.errors import PropagatedError
+from ..core.recovery import Action, RecoveryPolicy
+from ..launch.steps import make_cache_prefill, make_slot_decode_step
+from ..models import build_model
+from .metrics import ServeMetrics
+from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
+from .scheduler import ContinuousBatchingScheduler
+
+# CPU/interpret backends fall back to the fused-by-XLA probe oracle anyway;
+# forcing it keeps the vmapped step portable (see kernels/fault_probe/ops.py).
+SERVE_PROBES = ProbeConfig(use_kernel=False)
+
+
+@functools.lru_cache(maxsize=None)
+def make_enum_fn(num_slots: int):
+    """Jitted ``(words, mask) -> (combined, count, table)`` over the slot axis.
+
+    Free slots are masked out (their caches may hold stale values from an
+    evicted sequence), then the paper's enumeration attributes each remaining
+    word to its slot. ``max_errors=num_slots`` so attribution never truncates.
+    Cached per slot count, so a fleet of replicas compiles it once.
+    """
+    from ..core.device_channel import combine_words, enumerate_errors_ref
+
+    @jax.jit
+    def enum(words, mask):
+        words = words.astype(WORD_DTYPE) * mask.astype(WORD_DTYPE)
+        combined = combine_words(*(words[i] for i in range(num_slots)))
+        count, table = enumerate_errors_ref(words, max_errors=num_slots)
+        return combined, count, table
+
+    return enum
+
+
+class Replica:
+    """One continuous-batching serving replica (single host / rank)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any = None, *,
+                 num_slots: int = 4, max_len: int = 64,
+                 queue: RequestQueue | None = None,
+                 policy: RecoveryPolicy | None = None,
+                 metrics: ServeMetrics | None = None,
+                 probe_cfg: ProbeConfig = SERVE_PROBES,
+                 max_request_retries: int = 2,
+                 rank: int = 0, seed: int = 0, eos_id: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 decode_fn: Callable | None = None,
+                 prefill_fn: Callable | None = None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self.max_len = max_len
+        self.rank = rank
+        self.clock = clock
+        self.policy = policy or RecoveryPolicy()
+        self.metrics = metrics or ServeMetrics(clock=clock)
+        self.max_request_retries = max_request_retries
+        # jitted step functions are shareable across replicas (ServeGroup
+        # builds them once so N rank threads compile once, not N times)
+        self._decode = decode_fn or jax.jit(
+            make_slot_decode_step(cfg, probe_cfg))
+        self._prefill = prefill_fn or make_cache_prefill(cfg, probe_cfg)
+        self._enum = make_enum_fn(num_slots)
+        self.queue = queue or RequestQueue(
+            AdmissionPolicy(max_total_len=max_len), clock=clock)
+        self.sched = ContinuousBatchingScheduler(
+            num_slots, self.queue, replica=rank, eos_id=eos_id, clock=clock)
+        # stacked per-sequence (batch=1) caches, leading slot axis
+        one = self.model.init_cache(1, max_len)
+        self.caches = jax.tree_util.tree_map(
+            lambda v: jnp.broadcast_to(v[None], (num_slots, *v.shape)).copy(),
+            one)
+        self._slot_logits = jnp.zeros((num_slots, 1, 1, cfg.vocab_size),
+                                      jnp.float32)
+        self._step_count = 0
+
+    # ------------------------------------------------------------- submission
+    def submit(self, req: Request) -> Optional[Response]:
+        """Admit a request; returns a ``REJECTED`` response or None (accepted).
+        Every accepted request is eventually answered by ``step``/``run``."""
+        resp = self.queue.submit(req)
+        if resp is not None:
+            self.metrics.record_response(resp)
+        return resp
+
+    # ---------------------------------------------------------- fault surface
+    def inject_state_fault(self, slot: Optional[int] = None) -> Optional[int]:
+        """Simulated SDC (paper §II-A): NaN one element of a slot's recurrent
+        state on device. ``slot=None`` picks the first active slot. Returns the
+        poisoned slot, or None if there was nothing to poison."""
+        if slot is None:
+            active = self.sched.active_slots()
+            if not active:
+                return None
+            slot = active[0]
+        hit = []
+
+        def poison(path, leaf):
+            keys = [getattr(k, "key", None) for k in path]
+            if any(k in ("h", "ssm") for k in keys) and leaf.ndim >= 1:
+                hit.append(True)
+                return leaf.at[(slot,) + (0,) * (leaf.ndim - 1)].set(jnp.nan)
+            return leaf
+
+        poisoned = jax.tree_util.tree_map_with_path(poison, self.caches)
+        if not hit:
+            raise ValueError(
+                f"{self.cfg.name}: no recurrent state to poison "
+                "(attention-only arch — flip a KV bit instead)")
+        self.caches = poisoned
+        return slot
+
+    # ------------------------------------------------------------- step cycle
+    def step(self) -> list[Response]:
+        """One scheduler cycle: expire → backfill/prefill → fused decode →
+        commit. Returns every request answered during the cycle."""
+        now = self.clock()
+        out: list[Response] = []
+        for req in self.queue.drain_expired(now):
+            out.append(Response(id=req.id, status=EXPIRED,
+                                latency_s=now - req.arrival_t,
+                                replica=self.rank,
+                                detail="deadline passed in queue"))
+        out.extend(self.sched.expire_active(now))
+        for slot, _req in self.sched.backfill(now):
+            resp = self._prefill_slot(slot)
+            if resp is not None:
+                out.append(resp)
+        if self.sched.has_active():
+            out.extend(self._decode_step())
+        for resp in out:
+            self.metrics.record_response(resp)
+        return out
+
+    def run(self, *, max_steps: int = 100_000) -> list[Response]:
+        """Serve until the queue and all slots drain; returns all responses.
+
+        Raises instead of returning if ``max_steps`` is exhausted with work
+        still pending — an accepted request is never silently dropped.
+        """
+        out: list[Response] = []
+        for _ in range(max_steps):
+            if self.idle():
+                return out
+            out.extend(self.step())
+        if not self.idle():
+            raise RuntimeError(
+                f"replica {self.rank}: {len(self.queue)} queued + "
+                f"{self.sched.in_flight()} in-flight requests unanswered "
+                f"after {max_steps} steps")
+        return out
+
+    def idle(self) -> bool:
+        return not len(self.queue) and not self.sched.has_active()
+
+    # ------------------------------------------------------------ decode path
+    def _decode_step(self) -> list[Response]:
+        self._step_count += 1
+        tokens, pos = self.sched.step_inputs()
+        mask = self.sched.active_mask()
+        logits, caches, words = self._decode(
+            self.params, self.caches, jnp.asarray(tokens), jnp.asarray(pos))
+        combined, count, table = self._enum(words, jnp.asarray(mask))
+        fut = DeviceFuture(outputs=(logits, caches), word=combined,
+                           count=count, table=table)
+        try:
+            logits, caches = fut.wait()
+            self._slot_logits, self.caches = logits, caches
+            return self._commit(skip=frozenset())
+        except PropagatedError as exc:
+            return self._recover(exc, fut)
+
+    def _commit(self, skip: frozenset[int]) -> list[Response]:
+        now = self.clock()
+        out = []
+        # argmax on device: ship S int32s to the host, not S×V logits
+        toks = np.asarray(jnp.argmax(self._slot_logits[:, 0, 0, :], axis=-1))
+        committed = 0
+        for slot in self.sched.active_slots():
+            if slot in skip:
+                continue
+            resp = self.sched.commit_token(slot, int(toks[slot]), now)
+            committed += 1
+            if resp is not None:
+                out.append(resp)
+        self.metrics.record_step(committed)
+        return out
+
+    # --------------------------------------------------------------- recovery
+    def _recover(self, exc: PropagatedError, fut: DeviceFuture) -> list[Response]:
+        decision = self.policy.decide(exc, self._step_count)
+        num_slots = self.sched.num_slots
+        faulted = sorted({e.rank for e in exc.errors if 0 <= e.rank < num_slots})
+        if not faulted:                      # unattributed word: assume all
+            faulted = list(self.sched.active_slots())
+        self.metrics.record_fault(self._step_count, int(exc.combined_code),
+                                  decision.action.value, tuple(faulted))
+        # Slots are independent under vmap: the dispatched outputs of the
+        # non-faulted slots are valid, so salvage them and only recompute the
+        # attributed ones — this is what keeps one bad sequence from stalling
+        # the whole batch.
+        self._slot_logits, self.caches = fut.outputs
+        if decision.action is Action.ROLLBACK:
+            # escalation: recompute every lane (whole-batch recompute is the
+            # serving analogue of restoring the last checkpoint)
+            targets, fail_now = list(self.sched.active_slots()), False
+        elif decision.action is Action.ABORT:
+            targets, fail_now = faulted, True
+        else:   # SKIP_BATCH / RESTORE_GOOD / CONTINUE / ... → per-sequence LFLR
+            targets, fail_now = faulted, False
+        out = self._commit(skip=frozenset(targets))
+        faulted_set = set(faulted)
+        for slot in targets:
+            if not self.sched.slots[slot].active:
+                continue                     # already evicted this cycle
+            # only the slots the enumeration attributed pay a retry: a healthy
+            # lane swept into a ROLLBACK recompute must not burn its budget
+            # (FAILED is reserved for requests that re-fault on recompute)
+            if slot in faulted_set:
+                retries = self.sched.note_retry(slot)
+            else:
+                retries = self.sched.request(slot).retries
+            if fail_now or retries > self.max_request_retries:
+                out.append(self.sched.evict(
+                    slot, FAILED,
+                    detail=f"{decision.reason} (retries={retries})"))
+                continue
+            resp = self._prefill_slot(slot)  # LFLR: recompute, don't restart
+            if resp is not None:
+                out.append(resp)
+        return out
+
+    # ---------------------------------------------------------------- prefill
+    def _prefill_slot(self, slot: int) -> Optional[Response]:
+        """(Re-)compute a slot's cache from its full token history and commit
+        the next token from the prefill logits. Serves both admission and the
+        LFLR recompute — they are literally the same operation."""
+        tokens = np.asarray([self.sched.sequence_tokens(slot)], np.int32)
+        logits, cache, word = self._prefill(self.params, tokens, self.max_len)
+        fut = DeviceFuture(outputs=(logits, cache), word=word)
+        try:
+            logits, cache = fut.wait()
+        except PropagatedError as exc:
+            retries = self.sched.note_retry(slot)
+            self.metrics.record_fault(self._step_count,
+                                      int(exc.combined_code),
+                                      "prefill_retry", (slot,))
+            if retries > self.max_request_retries:
+                return self.sched.evict(
+                    slot, FAILED,
+                    detail=f"prefill faulted {retries} times: {exc}")
+            return self._prefill_slot(slot)
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one: full.at[slot].set(one.astype(full.dtype)),
+            self.caches, cache)
+        self._slot_logits = self._slot_logits.at[slot].set(
+            logits.astype(jnp.float32))
+        tok = int(jnp.argmax(logits[0, -1]))
+        resp = self.sched.commit_token(slot, tok, self.clock())
+        self.metrics.record_prefill(1)
+        return resp

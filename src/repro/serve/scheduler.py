@@ -1,0 +1,203 @@
+"""Continuous-batching scheduler: fixed decode slots, evict + backfill.
+
+The scheduler is the host-side brain of a replica. It never touches JAX: it
+tracks which request occupies which decode slot, hands the replica the
+``(tokens, pos)`` arrays for the next fused step, consumes the sampled token
+per slot, evicts finished/expired/faulted sequences and backfills freed slots
+from the admission queue *every step* — prefill and decode share the same
+fixed-shape batch, so a long request never blocks the lane (the serving
+counterpart of the paper's "local errors must not block global progress").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .queue import EXPIRED, OK, Request, RequestQueue, Response
+
+
+@dataclass
+class Slot:
+    """One decode lane. ``req is None`` ⇔ the lane is free."""
+
+    idx: int
+    req: Optional[Request] = None
+    generated: list[int] = field(default_factory=list)
+    t_first: Optional[float] = None      # wall time of the first generated token
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+    @property
+    def seq_len(self) -> int:
+        """Tokens whose state is already in the cache (prompt + generated)."""
+        return len(self.req.prompt) + len(self.generated) if self.req else 0
+
+    def clear(self) -> None:
+        self.req = None
+        self.generated = []
+        self.t_first = None
+
+
+class ContinuousBatchingScheduler:
+    """Slot bookkeeping for one replica.
+
+    The replica drives it in a strict step cycle::
+
+        expire_active → backfill (replica prefills the admitted slots)
+        → step_inputs → [fused decode on device] → commit_token per slot
+
+    and on a fault, ``sequence_tokens``/``note_retry`` feed the LFLR recompute.
+    """
+
+    def __init__(self, num_slots: int, queue: RequestQueue, *,
+                 replica: Optional[int] = None, eos_id: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.queue = queue
+        self.slots = [Slot(i) for i in range(num_slots)]
+        self.replica = replica
+        self.eos_id = eos_id
+        self.clock = clock
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    def active_slots(self) -> list[int]:
+        return [s.idx for s in self.slots if s.active]
+
+    def free_slots(self) -> list[int]:
+        return [s.idx for s in self.slots if not s.active]
+
+    def has_active(self) -> bool:
+        return any(s.active for s in self.slots)
+
+    def in_flight(self) -> int:
+        return len(self.active_slots())
+
+    def request(self, slot: int) -> Request:
+        req = self.slots[slot].req
+        assert req is not None, f"slot {slot} is free"
+        return req
+
+    def sequence_tokens(self, slot: int) -> list[int]:
+        """Prompt + generated so far — the LFLR recompute input."""
+        s = self.slots[slot]
+        assert s.req is not None
+        return list(s.req.prompt) + s.generated
+
+    # ------------------------------------------------------------- admission
+    def backfill(self, now: Optional[float] = None) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue; returns (slot, request) pairs the
+        replica must prefill before the next decode step."""
+        now = self.clock() if now is None else now
+        admitted = []
+        for s in self.slots:
+            if s.active:
+                continue
+            req = self.queue.pop(now)
+            if req is None:
+                break
+            s.req = req
+            s.generated = []
+            s.t_first = None
+            admitted.append((s.idx, req))
+        return admitted
+
+    # ------------------------------------------------------------ step cycle
+    def step_inputs(self) -> tuple[np.ndarray, np.ndarray]:
+        """(tokens (S,1,1) int32, pos (S,) int32) for the fused decode step.
+
+        An active slot feeds its last token at its own absolute position; free
+        slots decode a dummy token at position 0 (their word is masked out and
+        their cache is overwritten at admission, so the work is dead weight the
+        fixed-shape batch pays for simplicity).
+        """
+        S = self.num_slots
+        tokens = np.zeros((S, 1, 1), np.int32)
+        pos = np.zeros((S,), np.int32)
+        for s in self.slots:
+            if not s.active:
+                continue
+            # The cache holds states for positions [0, seq_len-1): prefill
+            # consumed the prompt, decode consumed every generated token but
+            # the newest. The input is that newest token (the first one comes
+            # from the prefill logits, committed in Replica._prefill_slot, so
+            # active slots always have generated ≥ 1), at position seq_len-1.
+            last = s.generated[-1] if s.generated else s.req.prompt[-1]
+            tokens[s.idx, 0, 0] = last
+            pos[s.idx] = s.seq_len - 1
+        return tokens, pos
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([1 if s.active else 0 for s in self.slots], np.uint32)
+
+    def commit_token(self, slot: int, token: int,
+                     now: Optional[float] = None) -> Optional[Response]:
+        """Record one sampled token; returns a Response iff the slot finished."""
+        now = self.clock() if now is None else now
+        s = self.slots[slot]
+        assert s.req is not None, f"commit on free slot {slot}"
+        if s.t_first is None:
+            s.t_first = now
+        s.generated.append(int(token))
+        done = (len(s.generated) >= s.req.max_new_tokens
+                or (self.eos_id is not None and int(token) == self.eos_id))
+        if not done:
+            return None
+        return self._finish(s, OK, now)
+
+    def note_retry(self, slot: int) -> int:
+        """Count one LFLR recompute against the slot's request; returns total."""
+        req = self.request(slot)
+        req.retries += 1
+        return req.retries
+
+    # -------------------------------------------------------------- eviction
+    def evict(self, slot: int, status: str, now: Optional[float] = None,
+              detail: str = "") -> Response:
+        """Terminal eviction (EXPIRED / FAILED); frees the slot."""
+        now = self.clock() if now is None else now
+        return self._finish(self.slots[slot], status, now, detail=detail)
+
+    def expire_active(self, now: Optional[float] = None) -> list[Response]:
+        """Evict active sequences whose deadline passed mid-decode."""
+        now = self.clock() if now is None else now
+        out = []
+        for s in self.slots:
+            if s.active and s.req.deadline is not None and now >= s.req.deadline:
+                out.append(self._finish(s, EXPIRED, now,
+                                        detail="deadline passed mid-decode"))
+        return out
+
+    def _finish(self, s: Slot, status: str, now: float,
+                detail: str = "") -> Response:
+        req = s.req
+        resp = Response(
+            id=req.id, status=status, tokens=tuple(s.generated),
+            latency_s=now - req.arrival_t,
+            ttft_s=(s.t_first - req.arrival_t) if s.t_first is not None else None,
+            retries=req.retries, replica=self.replica, detail=detail)
+        s.clear()
+        return resp
+
+    # ------------------------------------------------------------- re-route
+    def drain_in_flight(self) -> list[Request]:
+        """Pull every in-flight request out of its slot (progress discarded —
+        the receiving replica recomputes from the prompt). API for external
+        drivers that rebalance work off a *live* replica; note a ServeGroup
+        kill is re-routed through the group ledger instead, since a dead
+        replica's scheduler can no longer be drained."""
+        out = []
+        for s in self.slots:
+            if s.active:
+                out.append(s.req)
+                s.clear()
+        return out

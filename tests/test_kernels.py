@@ -4,8 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="kernel property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.errors import ErrorCode
 from repro.kernels.fault_probe.kernel import probe_rows

@@ -15,8 +15,12 @@ P4  survivor consistency: any kill set under ULFM leaves all survivors with the
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (
     CommCorruptedError,

@@ -7,8 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.checkpoint import BuddyStore, Checkpointer
 from repro.data.pipeline import DataIterator, PipelineConfig, make_batch
