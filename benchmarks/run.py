@@ -7,16 +7,40 @@ Prints ``name,us_per_call,derived`` CSV:
   * recovery costs    -> LFLR vs optimizer-reset vs rollback vs buddy store
   * roofline bounds   -> per-cell dominant-term bound from dry-run artifacts
   * serving           -> repro.serve steady-state tokens/s + latency
-                         percentiles, clean vs injected-fault traffic
+                         percentiles, clean vs injected-fault traffic, for
+                         the per-token and decode-window engines
+
+Flags:
+  --json [PATH]   also write the serving benchmark as machine-readable JSON
+                  (default PATH: BENCH_serving.json) so the perf trajectory
+                  is tracked across PRs
+  --only NAME     run a single section (e.g. --only serving)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 
 def main() -> None:
     from . import (detection_overhead, error_propagation, recovery,
                    roofline_table, serving, transport_latency)
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH",
+                    help="write serving results to PATH as JSON")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run a single section")
+    args = ap.parse_args()
+
+    serving_record = {}
+
+    def serving_rows():
+        rows, record = serving.bench_all()
+        serving_record.update(record)
+        return rows
 
     print("name,us_per_call,derived")
     sections = [
@@ -25,8 +49,12 @@ def main() -> None:
         ("detection_overhead", detection_overhead.run),
         ("recovery", recovery.run),
         ("roofline", roofline_table.run),
-        ("serving", serving.run),
+        ("serving", serving_rows),
     ]
+    if args.only:
+        sections = [(n, f) for n, f in sections if n == args.only]
+        if not sections:
+            raise SystemExit(f"unknown section: {args.only}")
     for name, fn in sections:
         try:
             for row_name, derived, us in fn():
@@ -34,6 +62,11 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
             print(f"{name}_FAILED,0,0")
+    if args.json and serving_record:
+        with open(args.json, "w") as f:
+            json.dump(serving_record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

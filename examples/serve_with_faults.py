@@ -4,11 +4,14 @@ paper's fault machinery fused in.
     PYTHONPATH=src python examples/serve_with_faults.py
 
 Act 1 — one replica, a soft fault. A :class:`Replica` continuously batches
-requests over the fused slot-decode step (reduced recurrentgemma: hybrid
-RG-LRU + local attention, O(1) state per token). Midway we flip a bit of one
-sequence's recurrent state (a simulated SDC — the paper's soft-fault class).
-The ``DeviceFuture`` raises ``PropagatedError`` whose per-slot enumeration
-names the poisoned *slot*; the replica re-prefills just that sequence (LFLR:
+requests through the **zero-sync decode window** engine (``window=4``): four
+greedy steps run fused on device per dispatch, fault detection deferred to
+the window boundary (reduced recurrentgemma: hybrid RG-LRU + local
+attention, O(1) state per token). Midway we flip a bit of one sequence's
+recurrent state (a simulated SDC — the paper's soft-fault class). The
+``DeviceFuture`` raises ``PropagatedError`` at the *window* wait; the
+``(K, slots)`` word history names the poisoned ``(step, slot)``, the clean
+prefix commits, and the replica re-prefills just that sequence (LFLR:
 recompute, don't restart) while its batch-mates keep decoding.
 
 Act 2 — a replica fleet, a hard fault. A :class:`ServeGroup` of three
@@ -27,25 +30,27 @@ from repro.serve import Replica, Request, ServeGroup  # noqa: E402
 
 
 def act1_soft_fault(cfg):
-    print("=== Act 1: per-sequence LFLR on a single replica ===")
-    replica = Replica(cfg, num_slots=4, max_len=48)
+    print("=== Act 1: decode windows + per-sequence LFLR on one replica ===")
+    replica = Replica(cfg, num_slots=4, max_len=48, window=4)
     for i in range(6):      # 6 requests onto 4 slots: backfill is exercised
         rej = replica.submit(Request(id=i, prompt=(11 + i, 22 + i, 33 + i),
-                                     max_new_tokens=8))
+                                     max_new_tokens=12))
         assert rej is None, rej
     responses, steps = [], 0
     while not replica.idle():
-        if steps == 5:
+        if steps == 1:
             slot = replica.inject_state_fault()
-            print(f"step 5: injected NaN into slot {slot}'s recurrent state "
-                  "(simulated SDC)")
+            print(f"window 1: injected NaN into slot {slot}'s recurrent "
+                  "state (simulated SDC)")
         responses.extend(replica.step())
         steps += 1
     for r in sorted(responses, key=lambda r: r.id):
         print(f"  request {r.id}: {r.status}, tokens={list(r.tokens)}, "
               f"retries={r.retries}")
     s = replica.metrics.summary()
-    print(f"  faults seen: {s['faults']}  |  {s['tokens_per_s']:.0f} tok/s, "
+    print(f"  faults seen: {s['faults']}  |  {s['windows']} windows, "
+          f"{s['discarded_tokens']} trailing tokens discarded  |  "
+          f"{s['tokens_per_s']:.0f} tok/s, "
           f"p50 latency {s['latency_p50_s'] * 1e3:.0f} ms")
     print()
 

@@ -22,4 +22,13 @@ else
     status=1
 fi
 
+echo
+echo "== decode-hotpath smoke: benchmarks.serving --smoke =="
+if PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.serving --smoke; then
+    echo "decode-hotpath smoke: OK"
+else
+    echo "decode-hotpath smoke: FAILED"
+    status=1
+fi
+
 exit $status

@@ -131,6 +131,11 @@ def make_enumerate_fn(mesh: jax.sharding.Mesh, axis_name: str,
     """
     from jax.sharding import PartitionSpec as P
 
+    try:                                   # jax >= 0.5
+        shard_map = jax.shard_map
+    except AttributeError:                 # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+
     n = mesh.shape[axis_name]
 
     def body(words):
@@ -138,8 +143,8 @@ def make_enumerate_fn(mesh: jax.sharding.Mesh, axis_name: str,
             words[0], axis_name=axis_name, n=n, max_errors=max_errors)
         return count[None], table[None]
 
-    mapped = jax.shard_map(body, mesh=mesh, in_specs=P(axis_name),
-                           out_specs=(P(axis_name), P(axis_name, None, None)))
+    mapped = shard_map(body, mesh=mesh, in_specs=P(axis_name),
+                       out_specs=(P(axis_name), P(axis_name, None, None)))
 
     @jax.jit
     def run(words):
@@ -163,12 +168,22 @@ class DeviceFuture:
 
     ``outputs`` stay asynchronous; ``wait`` synchronises on the 4-byte error word
     (plus the optional enumeration table) and converts it to the paper's exceptions.
+
+    **Window semantics** (decode windows, ``launch.steps.make_decode_window``):
+    a future may cover K deferred steps at once. ``word`` is then the OR over
+    the whole window — checked once per K tokens, not per token — and
+    ``history`` holds the ``(K, ranks)`` per-step per-rank word matrix so that
+    on a fault :meth:`fault_steps` attributes it to its exact ``(step, rank)``:
+    everything before the first faulting step is a clean, committable prefix,
+    which is what keeps deterministic greedy replay (LFLR) bit-exact from the
+    last committed boundary.
     """
 
     outputs: Any
     word: jax.Array
     count: Optional[jax.Array] = None
     table: Optional[jax.Array] = None
+    history: Optional[jax.Array] = None   # (K, ranks) per-step word history
     _waited: bool = False
 
     def wait(self, timeout: float | None = None) -> Any:
@@ -194,6 +209,20 @@ class DeviceFuture:
 
     def result(self, timeout: float | None = None) -> Any:
         return self.wait(timeout=timeout)
+
+    def fault_steps(self) -> Optional[np.ndarray]:
+        """Per-rank index of the first faulting window step, or -1 if clean.
+
+        Requires window ``history``; returns an ``(ranks,)`` int array. Tokens
+        produced by steps ``< fault_steps()[r]`` on rank/slot ``r`` are a valid
+        prefix (their words were zero), so the host commits them and replays
+        only from the fault boundary.
+        """
+        if self.history is None:
+            return None
+        hist = np.asarray(jax.device_get(self.history))
+        bad = hist != 0
+        return np.where(bad.any(axis=0), bad.argmax(axis=0), -1).astype(np.int64)
 
     def _errors(self, word: int) -> list[RankError]:
         if self.count is None or self.table is None:

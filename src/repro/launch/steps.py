@@ -44,6 +44,11 @@ class PerfOptions:
                       (B,H) statistics instead of (B,H,T) score tensors).
     probes          — the in-band device channel on/off (off only for overhead
                       measurement — never in production).
+    window          — decode-window size K for serving: scan K fused slot-decode
+                      steps fully on device with deferred fault detection
+                      (``make_decode_window``); 0 = per-token decode.
+    donate          — donate caches/slot state to the decode window so XLA
+                      updates them in place (no per-window cache copy).
     """
 
     microbatch: int = 0
@@ -52,10 +57,13 @@ class PerfOptions:
     cache_seq_model: bool = False
     probes: bool = True
     ep_constraint: bool = False   # MoE dispatch buffers constrained E-over-model
+    window: int = 0
+    donate: bool = True
 
     @classmethod
     def parse(cls, spec: str) -> "PerfOptions":
-        """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1' → PerfOptions."""
+        """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1,window=8,donate=1'
+        → PerfOptions."""
         kw: dict = {}
         for part in (spec or "").split(","):
             if not part:
@@ -63,9 +71,11 @@ class PerfOptions:
             k, v = part.split("=")
             k = {"mb": "microbatch", "ce": "ce_chunk", "sp": "seq_shard",
                  "cacheseq": "cache_seq_model", "probes": "probes",
-                 "ep": "ep_constraint"}[k]
+                 "ep": "ep_constraint", "win": "window", "window": "window",
+                 "donate": "donate"}[k]
             kw[k] = bool(int(v)) if k in ("seq_shard", "cache_seq_model",
-                                          "probes", "ep_constraint") else int(v)
+                                          "probes", "ep_constraint",
+                                          "donate") else int(v)
         return cls(**kw)
 
 
@@ -228,7 +238,57 @@ def make_slot_decode_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None
                     in_axes=(None, 0, 0, 0))
 
 
-def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
+def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
+                       *, window: int, donate: bool = True):
+    """Pipelined decode window: K fused slot-decode steps in one device program.
+
+    The serving hot path must not pay a host-device round trip per token — the
+    paper's asynchrony contract (errors latch in-band and raise at the *wait*,
+    not eagerly at every operation) applied to decoding. ``lax.scan`` runs
+    ``window`` iterations of :func:`make_slot_decode_step` fully on device:
+    greedy argmax is computed *inside* the scan and fed back as the next input
+    token, so the token chain never touches the host; per-step per-slot error
+    words are stacked into a ``(K, slots)`` history so the host can defer fault
+    detection to the window boundary and still attribute a fault to its exact
+    ``(step, slot)`` (LFLR replays greedy from the last committed boundary —
+    deterministic, hence bit-exact).
+
+    Signature of the returned jitted function::
+
+      window_step(params, caches, tokens, pos)
+        caches  pytree, leaves (S, ...)   donated when ``donate`` (in-place)
+        tokens  (S, 1, 1) int32           input token per slot
+        pos     (S,) int32                per-slot absolute position
+      → (tokens (K, S) int32,             greedy token emitted per step × slot
+         words  (K, S) uint32,            per-(step, slot) error-word history
+         next_tok (S, 1, 1) int32,        device-resident feed for window N+1
+         new caches)
+
+    ``next_tok``/``new caches`` let the replica dispatch window N+1 *before*
+    reading back window N's token block (double-buffered commit loop): the
+    chain's data dependencies live entirely on device.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    slot_step = make_slot_decode_step(cfg, probe_cfg)
+
+    def window_step(params, caches, tokens, pos):
+        def body(carry, _):
+            caches, tok, p = carry
+            logits, caches, words = slot_step(params, caches, tok, p)
+            nxt = jnp.argmax(logits[:, 0, 0, :], axis=-1).astype(jnp.int32)
+            return (caches, nxt[:, None, None], p + 1), (nxt, words)
+
+        (caches, next_tok, _), (toks, words) = jax.lax.scan(
+            body, (caches, jnp.asarray(tokens, jnp.int32),
+                   jnp.asarray(pos, jnp.int32)), None, length=window)
+        return toks, words.astype(jnp.uint32), next_tok, caches
+
+    return jax.jit(window_step, donate_argnums=(1,) if donate else ())
+
+
+def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
+                       *, fused: bool = False):
     """Cache-producing prefill built by reusing the decode step.
 
     Returns ``prefill(params, tokens, max_len, start_pos=0)`` for ``tokens``
@@ -237,25 +297,68 @@ def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None):
     This is the recompute path of serving LFLR: re-running it over
     prompt + generated tokens rebuilds a poisoned sequence's state exactly
     (greedy decode is deterministic), so recovery never restarts the request.
-    The decode step is reused token-by-token — exact at small scale; a fused
-    chunked prefill is a later scaling PR (see DESIGN.md §3).
+
+    Two implementations, both token-by-token through the *same* decode step
+    (sharing the step is what makes the LFLR recompute reproduce the batched
+    trajectory exactly):
+
+    * ``fused=False`` — a host loop of S jitted step dispatches (the PR-1
+      path: simple, one compile, but S dispatch overheads per prefill);
+    * ``fused=True``  — one jitted ``lax.fori_loop`` whose trip count is the
+      *traced* real length: tokens are padded to the (static) cache capacity
+      so one compile serves every prompt/recompute length, but only the real
+      steps execute — no wasted padded iterations, no masking, and the body
+      is the same decode step, so the result is bit-identical to the loop.
+      This is the serving window engine's admission/LFLR path: one dispatch
+      per prefill instead of S.
     """
     model = build_model(cfg)
-    step = jax.jit(make_decode_step(cfg, probe_cfg))
+    step_fn = make_decode_step(cfg, probe_cfg)
+    if not fused:
+        step = jax.jit(step_fn)
+
+        def prefill(params, tokens, max_len: int, start_pos: int = 0):
+            tokens = jnp.asarray(tokens, jnp.int32)
+            if tokens.ndim != 2 or tokens.shape[1] == 0:
+                raise ValueError(f"tokens must be (B, S>0), got {tokens.shape}")
+            _, S = tokens.shape
+            cache = model.init_cache(tokens.shape[0], max_len)
+            word = jnp.uint32(0)
+            logits = None
+            for i in range(S):
+                logits, cache, w = step(params, cache, tokens[:, i:i + 1],
+                                        jnp.int32(start_pos + i))
+                word = word | w
+            return logits, cache, word
+
+        return prefill
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def run(params, tokens_padded, max_len: int, n, start_pos):
+        B, _ = tokens_padded.shape
+        cache0 = model.init_cache(B, max_len)
+        logits0 = jnp.zeros((B, 1, cfg.vocab_size), jnp.float32)
+
+        def body(i, carry):
+            cache, word, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens_padded, i, 1, axis=1)
+            logits, cache, w = step_fn(params, cache, tok, start_pos + i)
+            return (cache, word | w, logits.astype(jnp.float32))
+
+        return jax.lax.fori_loop(0, n, body,
+                                 (cache0, jnp.uint32(0), logits0))
 
     def prefill(params, tokens, max_len: int, start_pos: int = 0):
         tokens = jnp.asarray(tokens, jnp.int32)
         if tokens.ndim != 2 or tokens.shape[1] == 0:
             raise ValueError(f"tokens must be (B, S>0), got {tokens.shape}")
         _, S = tokens.shape
-        cache = model.init_cache(tokens.shape[0], max_len)
-        word = jnp.uint32(0)
-        logits = None
-        for i in range(S):
-            logits, cache, w = step(params, cache, tokens[:, i:i + 1],
-                                    jnp.int32(start_pos + i))
-            word = word | w
-        return logits, cache, word
+        if S > max_len:
+            raise ValueError(f"prompt of {S} tokens exceeds capacity {max_len}")
+        padded = jnp.pad(tokens, ((0, 0), (0, max_len - S)))
+        cache, word, last = run(params, padded, int(max_len), jnp.int32(S),
+                                jnp.int32(start_pos))
+        return last, cache, word
 
     return prefill
 

@@ -36,7 +36,11 @@ import jax
 from ..core import CommCorruptedError, PropagatedError, initialize, run_ranks
 from ..core.faults import FaultSchedule
 from ..core.transport import RankResult
-from ..launch.steps import make_cache_prefill, make_slot_decode_step
+from ..launch.steps import (
+    make_cache_prefill,
+    make_decode_window,
+    make_slot_decode_step,
+)
 from ..models import build_model
 from .metrics import ServeMetrics
 from .queue import AdmissionPolicy, Request, RequestQueue, Response
@@ -140,7 +144,7 @@ class ServeGroup:
     def __init__(self, cfg, nranks: int, *, num_slots: int = 2,
                  max_len: int = 64, seed: int = 0, probe_cfg=SERVE_PROBES,
                  max_request_retries: int = 2, eos_id: Optional[int] = None,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, window: int = 0, donate: bool = True):
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
         self.cfg = cfg
@@ -150,10 +154,16 @@ class ServeGroup:
         self.timeout = timeout
         self.max_request_retries = max_request_retries
         self.eos_id = eos_id
+        self.window = int(window)
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
         self._decode_fn = jax.jit(make_slot_decode_step(cfg, probe_cfg))
-        self._prefill_fn = make_cache_prefill(cfg, probe_cfg)
+        self._prefill_fn = make_cache_prefill(cfg, probe_cfg,
+                                              fused=bool(self.window))
+        self._window_fn = (make_decode_window(cfg, probe_cfg,
+                                              window=self.window,
+                                              donate=donate)
+                           if self.window else None)
 
     def serve(self, requests: Sequence[Request], *,
               faults: FaultSchedule | None = None,
@@ -178,7 +188,8 @@ class ServeGroup:
                 max_len=self.max_len, queue=queue, rank=ctx.rank,
                 max_request_retries=self.max_request_retries,
                 eos_id=self.eos_id,
-                decode_fn=self._decode_fn, prefill_fn=self._prefill_fn)
+                decode_fn=self._decode_fn, prefill_fn=self._prefill_fn,
+                window=self.window, window_fn=self._window_fn)
             report = RankReport(rank=ctx.rank, metrics=replica.metrics)
             for round_i in range(max_rounds):
                 for spec in faults.at(round_i, ctx.rank):

@@ -38,6 +38,9 @@ class ServeMetrics:
         self.decode_tokens = 0               # all committed tokens (incl. the
         self._t0: Optional[float] = None     # first one, from prefill logits)
         self._t_last: Optional[float] = None
+        self.windows = 0                     # decode windows retired
+        self.discarded_tokens = 0            # trailing tokens dropped at window
+                                             # boundaries (EOS/budget/fault)
 
     # ------------------------------------------------------------- recording
     def record_step(self, committed_tokens: int) -> None:
@@ -45,6 +48,16 @@ class ServeMetrics:
             self._tick()
             self.decode_steps += 1
             self.decode_tokens += committed_tokens
+
+    def record_window(self, committed_tokens: int, discarded_tokens: int,
+                      window: int) -> None:
+        """One retired decode window: K deferred device steps, one host sync."""
+        with self._lock:
+            self._tick()
+            self.windows += 1
+            self.decode_steps += window
+            self.decode_tokens += committed_tokens
+            self.discarded_tokens += discarded_tokens
 
     def record_prefill(self, committed_tokens: int = 1) -> None:
         """A (re-)prefill that committed its first token from prefill logits."""
@@ -107,6 +120,8 @@ class ServeMetrics:
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "decode_tokens": self.decode_tokens,
+            "windows": self.windows,
+            "discarded_tokens": self.discarded_tokens,
             "tokens_per_s": self.tokens_per_s(),
             "faults": self.fault_counts(),
             "retries": sum(r.retries for r in self.responses),

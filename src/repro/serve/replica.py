@@ -6,6 +6,19 @@ wrapped in a :class:`~repro.core.device_channel.DeviceFuture`; the per-slot
 error words run through the paper's enumeration algorithm so the
 ``PropagatedError`` raised at the wait carries exact ``(slot, code)`` pairs.
 
+With ``window=K`` the hot path moves to the **zero-sync decode window**
+(:func:`~repro.launch.steps.make_decode_window`): K greedy steps run fully on
+device, fault detection is deferred to the window boundary (the paper's
+asynchrony contract — errors latch in-band, raise at the *wait*), and the
+commit loop is **double-buffered**: window N+1 is dispatched from window N's
+device-resident outputs (next token + donated caches) *before* window N's
+token block is read back, so the device never idles on a host round trip.
+Host syncs scale with ``steps / K`` instead of ``steps``. EOS / deadline /
+faulted slots are handled at window boundaries: trailing tokens are
+discarded, freed lanes are backfilled, and the already-in-flight speculative
+window is patched — its stale lanes are marked invalid and simply skipped at
+its own retirement.
+
 Recovery is the paper's use-case 1 applied to inference:
 
 * ``STATE_FAULT`` (bit-flipped recurrent state) or non-finite logits on slot
@@ -22,6 +35,7 @@ from __future__ import annotations
 
 import functools
 import time
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
@@ -33,7 +47,11 @@ from ..core.detect import ProbeConfig
 from ..core.device_channel import WORD_DTYPE, DeviceFuture
 from ..core.errors import PropagatedError
 from ..core.recovery import Action, RecoveryPolicy
-from ..launch.steps import make_cache_prefill, make_slot_decode_step
+from ..launch.steps import (
+    make_cache_prefill,
+    make_decode_window,
+    make_slot_decode_step,
+)
 from ..models import build_model
 from .metrics import ServeMetrics
 from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
@@ -65,6 +83,47 @@ def make_enum_fn(num_slots: int):
     return enum
 
 
+@functools.lru_cache(maxsize=None)
+def make_window_enum_fn(num_slots: int):
+    """Jitted ``(history (K, S), mask (S,)) -> (combined, count, table, hist)``.
+
+    The window variant of :func:`make_enum_fn`: free slots are masked out of
+    the whole ``(K, slots)`` word history, per-slot words are OR-folded over
+    the window (deferred detection — one check per K tokens), and the fold is
+    handed to the *same* per-slot enumeration the stepwise engine uses, so
+    the two engines cannot diverge in attribution semantics. The masked
+    history rides along so :meth:`DeviceFuture.fault_steps` can attribute a
+    fault to its exact ``(step, slot)`` on the (rare) fault path only.
+    """
+    slot_enum = make_enum_fn(num_slots)
+
+    @jax.jit
+    def enum(history, mask):
+        hist = history.astype(WORD_DTYPE) * mask.astype(WORD_DTYPE)[None, :]
+        words = jax.lax.reduce(hist, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+        combined, count, table = slot_enum(words, jnp.ones_like(mask))
+        return combined, count, table, hist
+
+    return enum
+
+
+@dataclass
+class _WindowInFlight:
+    """One dispatched decode window awaiting retirement.
+
+    ``req_ids`` snapshots which request occupied each slot at dispatch (None =
+    free lane); a lane's token block only commits if the same request still
+    holds the slot at retirement. ``valid`` is cleared for a lane when the
+    host patches its device state (LFLR re-prefill / backfill) while this
+    window is already in flight — the lane's tokens *and its error words* are
+    then stale and are skipped wholesale at retirement.
+    """
+
+    fut: DeviceFuture
+    req_ids: tuple
+    valid: np.ndarray
+
+
 class Replica:
     """One continuous-batching serving replica (single host / rank)."""
 
@@ -78,7 +137,9 @@ class Replica:
                  rank: int = 0, seed: int = 0, eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
                  decode_fn: Callable | None = None,
-                 prefill_fn: Callable | None = None):
+                 prefill_fn: Callable | None = None,
+                 window: int = 0, donate: bool = True,
+                 window_fn: Callable | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -93,8 +154,17 @@ class Replica:
         # builds them once so N rank threads compile once, not N times)
         self._decode = decode_fn or jax.jit(
             make_slot_decode_step(cfg, probe_cfg))
-        self._prefill = prefill_fn or make_cache_prefill(cfg, probe_cfg)
+        self._prefill = prefill_fn or make_cache_prefill(cfg, probe_cfg,
+                                                         fused=bool(window))
         self._enum = make_enum_fn(num_slots)
+        # fused one-dispatch insertion of a rebuilt per-sequence cache into the
+        # slot-stacked caches (the un-jitted tree_map was one dispatch per
+        # leaf); the window-mode device token feed rides in the same dispatch
+        self._insert = jax.jit(
+            lambda full, one, slot, dev_toks, tok: (
+                jax.tree_util.tree_map(
+                    lambda f, o: f.at[slot].set(o.astype(f.dtype)), full, one),
+                dev_toks.at[slot, 0, 0].set(tok)))
         self.queue = queue or RequestQueue(
             AdmissionPolicy(max_total_len=max_len), clock=clock)
         self.sched = ContinuousBatchingScheduler(
@@ -107,6 +177,30 @@ class Replica:
         self._slot_logits = jnp.zeros((num_slots, 1, 1, cfg.vocab_size),
                                       jnp.float32)
         self._step_count = 0
+        # ---- zero-sync decode windows (window=K > 0) ----------------------
+        self.window = int(window)
+        if self.window:
+            self._decode_window = window_fn or make_decode_window(
+                cfg, probe_cfg, window=self.window, donate=donate)
+            self._wenum = make_window_enum_fn(num_slots)
+        self._pending: Optional[_WindowInFlight] = None
+        # device-resident feed for the next window (token chain never leaves
+        # the device) + host-tracked dispatch positions
+        self._dev_tokens = jnp.zeros((num_slots, 1, 1), jnp.int32)
+        self._dev_pos = np.zeros((num_slots,), np.int32)
+
+    # ---------------------------------------------------------------- warmup
+    def warmup(self, *, max_new: int = 8) -> None:
+        """Compile every hot-path program before real traffic: one throwaway
+        request end-to-end covers prefill (the fused variant compiles once
+        for *all* lengths), decode/window and commit. Swaps in fresh metrics
+        afterwards so compile time never pollutes reported numbers."""
+        assert self.idle(), "warmup must run before traffic is admitted"
+        req = Request(id=-1, prompt=(1, 2, 3),
+                      max_new_tokens=min(max_new, self.max_len - 4))
+        assert self.submit(req) is None
+        self.run()
+        self.metrics = ServeMetrics(clock=self.clock)
 
     # ------------------------------------------------------------- submission
     def submit(self, req: Request) -> Optional[Response]:
@@ -160,7 +254,10 @@ class Replica:
             resp = self._prefill_slot(slot)
             if resp is not None:
                 out.append(resp)
-        if self.sched.has_active():
+        if self.window:
+            if self.sched.has_active() or self._pending is not None:
+                out.extend(self._window_cycle())
+        elif self.sched.has_active():
             out.extend(self._decode_step())
         for resp in out:
             self.metrics.record_response(resp)
@@ -185,7 +282,8 @@ class Replica:
         return out
 
     def idle(self) -> bool:
-        return not len(self.queue) and not self.sched.has_active()
+        return (not len(self.queue) and not self.sched.has_active()
+                and self._pending is None)
 
     # ------------------------------------------------------------ decode path
     def _decode_step(self) -> list[Response]:
@@ -208,7 +306,8 @@ class Replica:
         now = self.clock()
         out = []
         # argmax on device: ship S int32s to the host, not S×V logits
-        toks = np.asarray(jnp.argmax(self._slot_logits[:, 0, 0, :], axis=-1))
+        toks = np.asarray(jax.device_get(
+            jnp.argmax(self._slot_logits[:, 0, 0, :], axis=-1)))
         committed = 0
         for slot in self.sched.active_slots():
             if slot in skip:
@@ -218,6 +317,125 @@ class Replica:
             if resp is not None:
                 out.append(resp)
         self.metrics.record_step(committed)
+        return out
+
+    # --------------------------------------------------------- window engine
+    def _window_cycle(self) -> list[Response]:
+        """Double-buffered commit loop: dispatch window N+1 from window N's
+        device-resident outputs *before* reading back window N's tokens."""
+        prev = self._pending
+        self._pending = (self._dispatch_window()
+                         if self.sched.has_active() else None)
+        return self._retire_window(prev) if prev is not None else []
+
+    def _dispatch_window(self) -> _WindowInFlight:
+        self._step_count += 1
+        sched = self.sched
+        mask = sched.active_mask()
+        toks, words, next_tok, caches = self._decode_window(
+            self.params, self.caches, self._dev_tokens,
+            jnp.asarray(self._dev_pos))
+        # the device-side chain advances: window N+1 consumes these directly
+        self.caches = caches
+        self._dev_tokens = next_tok
+        self._dev_pos = self._dev_pos + self.window
+        combined, count, table, hist = self._wenum(words, jnp.asarray(mask))
+        fut = DeviceFuture(outputs=toks, word=combined, count=count,
+                           table=table, history=hist)
+        return _WindowInFlight(
+            fut=fut,
+            req_ids=tuple(s.req.id if s.active else None for s in sched.slots),
+            valid=np.ones(sched.num_slots, bool))
+
+    def _retire_window(self, win: _WindowInFlight) -> list[Response]:
+        try:
+            tok_block = win.fut.wait()
+        except PropagatedError as exc:
+            return self._recover_window(win, exc)
+        toks = np.asarray(jax.device_get(tok_block))
+        return self._commit_window(win, toks)
+
+    def _commit_window(self, win: _WindowInFlight, toks: np.ndarray,
+                       limits: Optional[np.ndarray] = None) -> list[Response]:
+        """Commit each lane's token block up to EOS / token budget / its fault
+        boundary (``limits``); trailing tokens are discarded. Lanes whose
+        request left the slot since dispatch (finished, expired, re-routed) or
+        whose state was patched mid-flight (``valid`` cleared) are skipped."""
+        now = self.clock()
+        K = self.window
+        out: list[Response] = []
+        committed = discarded = 0
+        for slot, rid in enumerate(win.req_ids):
+            if rid is None:
+                continue                         # lane was free at dispatch
+            s = self.sched.slots[slot]
+            if not s.active or s.req.id != rid or not win.valid[slot]:
+                discarded += K
+                continue
+            limit = K if limits is None else int(limits[slot])
+            k, done = self.sched.commit_block(slot, toks[:, slot], now,
+                                              limit=limit)
+            committed += k
+            discarded += K - k
+            if done is not None:
+                out.append(done)
+        self.metrics.record_window(committed, discarded, K)
+        return out
+
+    def _recover_window(self, win: _WindowInFlight,
+                        exc: PropagatedError) -> list[Response]:
+        """Deferred-detection recovery: the ``(K, slots)`` history attributes
+        the fault to its exact ``(step, slot)``; the clean prefix before the
+        fault step commits (it is part of the deterministic greedy trajectory)
+        and only the faulted suffix is recomputed via LFLR re-prefill."""
+        num_slots = self.sched.num_slots
+        K = self.window
+        faulted = sorted({e.rank for e in exc.errors if 0 <= e.rank < num_slots})
+        if not faulted:                      # unattributed word: assume all
+            faulted = list(self.sched.active_slots())
+        # a lane patched while this window was in flight re-reports its old
+        # fault (the window *computed* with the poisoned state even though the
+        # state has since been repaired) — stale, already recovered: drop it
+        faulted = [s for s in faulted if win.valid[s]]
+        toks = np.asarray(jax.device_get(win.fut.outputs))
+        if not faulted:
+            return self._commit_window(win, toks)
+        decision = self.policy.decide(exc, self._step_count)
+        self.metrics.record_fault(self._step_count, int(exc.combined_code),
+                                  decision.action.value, tuple(faulted))
+        steps = win.fut.fault_steps()        # first faulting step per slot
+        limits = np.full(num_slots, K, np.int64)
+        for slot in faulted:
+            limits[slot] = steps[slot] if steps is not None and steps[slot] >= 0 else 0
+        if decision.action is Action.ROLLBACK:
+            targets, fail_now = list(self.sched.active_slots()), False
+        elif decision.action is Action.ABORT:
+            targets, fail_now = faulted, True
+        else:   # SKIP_BATCH / RESTORE_GOOD / CONTINUE / ... → per-sequence LFLR
+            targets, fail_now = faulted, False
+        out = self._commit_window(win, toks, limits=limits)
+        faulted_set = set(faulted)
+        for slot in targets:
+            s = self.sched.slots[slot]
+            if not s.active or s.req.id != win.req_ids[slot]:
+                continue                     # finished/evicted inside its prefix
+            if slot in faulted_set:
+                retries = self.sched.note_retry(slot)
+            else:
+                retries = self.sched.request(slot).retries
+            if fail_now or retries > self.max_request_retries:
+                out.append(self.sched.evict(
+                    slot, FAILED,
+                    detail=f"{decision.reason} (retries={retries})"))
+                if self._pending is not None:
+                    # the in-flight speculative window computed with the same
+                    # poisoned state; without a prefill patch clearing it, its
+                    # lane would re-raise this fault as a new one at retire
+                    self._pending.valid[slot] = False
+                continue
+            resp = self._prefill_slot(slot)  # LFLR: recompute, don't restart
+            if resp is not None:
+                out.append(resp)
         return out
 
     # --------------------------------------------------------------- recovery
@@ -268,7 +486,13 @@ class Replica:
     def _prefill_slot(self, slot: int) -> Optional[Response]:
         """(Re-)compute a slot's cache from its full token history and commit
         the next token from the prefill logits. Serves both admission and the
-        LFLR recompute — they are literally the same operation."""
+        LFLR recompute — they are literally the same operation.
+
+        In window mode this is also the *patch point* of the double-buffered
+        pipeline: the rebuilt cache / next-token / position overwrite the
+        lane's device state (the in-flight speculative window's outputs), and
+        the lane is marked invalid in that window so its stale block is
+        skipped at retirement."""
         tokens = np.asarray([self.sched.sequence_tokens(slot)], np.int32)
         logits, cache, word = self._prefill(self.params, tokens, self.max_len)
         fut = DeviceFuture(outputs=(logits, cache), word=word)
@@ -284,12 +508,19 @@ class Replica:
                     slot, FAILED,
                     detail=f"prefill faulted {retries} times: {exc}")
             return self._prefill_slot(slot)
-        self.caches = jax.tree_util.tree_map(
-            lambda full, one: full.at[slot].set(one.astype(full.dtype)),
-            self.caches, cache)
-        self._slot_logits = self._slot_logits.at[slot].set(
-            logits.astype(jnp.float32))
-        tok = int(jnp.argmax(logits[0, -1]))
+        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
+        self.caches, self._dev_tokens = self._insert(
+            self.caches, cache, jnp.int32(slot), self._dev_tokens,
+            jnp.int32(tok))
+        if not self.window:
+            # only the stepwise commit path reads logits back per slot
+            self._slot_logits = self._slot_logits.at[slot].set(
+                logits.astype(jnp.float32))
         resp = self.sched.commit_token(slot, tok, self.clock())
         self.metrics.record_prefill(1)
+        if self.window:
+            s = self.sched.slots[slot]
+            self._dev_pos[slot] = s.seq_len - 1 if s.active else 0
+            if self._pending is not None:
+                self._pending.valid[slot] = False
         return resp

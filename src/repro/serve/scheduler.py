@@ -51,7 +51,12 @@ class ContinuousBatchingScheduler:
         expire_active → backfill (replica prefills the admitted slots)
         → step_inputs → [fused decode on device] → commit_token per slot
 
-    and on a fault, ``sequence_tokens``/``note_retry`` feed the LFLR recompute.
+    In window mode (``Replica(window=K)``) the cycle retires one K-token
+    decode window per step instead: ``commit_block`` consumes each lane's
+    token block up to EOS / budget / fault boundary and discards the trailing
+    tokens the deferred-detection window over-decoded.
+
+    On a fault, ``sequence_tokens``/``note_retry`` feed the LFLR recompute.
     """
 
     def __init__(self, num_slots: int, queue: RequestQueue, *,
@@ -153,6 +158,26 @@ class ContinuousBatchingScheduler:
         if not done:
             return None
         return self._finish(s, OK, now)
+
+    def commit_block(self, slot: int, tokens, now: Optional[float] = None,
+                     limit: Optional[int] = None
+                     ) -> tuple[int, Optional[Response]]:
+        """Commit a window's token block for one lane.
+
+        Feeds ``tokens[:limit]`` through :meth:`commit_token` until the
+        request finishes (EOS / token budget); returns ``(consumed, response)``
+        where ``response`` is non-None iff the lane finished mid-block —
+        everything after that boundary is discarded by the caller.
+        """
+        now = self.clock() if now is None else now
+        limit = len(tokens) if limit is None else min(limit, len(tokens))
+        consumed = 0
+        for k in range(limit):
+            resp = self.commit_token(slot, int(tokens[k]), now)
+            consumed += 1
+            if resp is not None:
+                return consumed, resp
+        return consumed, None
 
     def note_retry(self, slot: int) -> int:
         """Count one LFLR recompute against the slot's request; returns total."""

@@ -60,6 +60,21 @@ def test_device_future_ok_passthrough():
     assert fut.result() == {"x": 1}  # idempotent
 
 
+def test_device_future_window_fault_steps():
+    """Window semantics: the (K, slots) history attributes a fault to its
+    exact (step, slot); clean slots report -1."""
+    hist = jnp.array([[0, 0, 0],
+                      [0, 9, 0],
+                      [3, 9, 0]], dtype=jnp.uint32)     # (K=3, slots=3)
+    word = jnp.uint32(3 | 9)
+    fut = DeviceFuture(outputs=None, word=word, history=hist)
+    np.testing.assert_array_equal(fut.fault_steps(), [2, 1, -1])
+    with pytest.raises(PropagatedError):
+        fut.wait()
+    # no history → no step attribution (per-step futures)
+    assert DeviceFuture(outputs=None, word=word).fault_steps() is None
+
+
 def test_device_future_corrupted():
     word = jnp.uint32(int(ErrorCode.COMM_CORRUPTED))
     fut = DeviceFuture(outputs=None, word=word)
@@ -125,8 +140,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import enumerate_errors_ref, make_enumerate_fn
-mesh = jax.make_mesh((8,), ("ranks",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+kw = ({"axis_types": (jax.sharding.AxisType.Auto,)}
+      if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((8,), ("ranks",), **kw)
 run = make_enumerate_fn(mesh, "ranks")
 rng = np.random.default_rng(0)
 for trial in range(20):
