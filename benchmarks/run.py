@@ -11,16 +11,59 @@ Prints ``name,us_per_call,derived`` CSV:
                          the per-token and decode-window engines
 
 Flags:
-  --json [PATH]   also write the serving benchmark as machine-readable JSON
-                  (default PATH: BENCH_serving.json) so the perf trajectory
-                  is tracked across PRs
+  --json [PATH]   also append the serving benchmark to the run history in
+                  PATH (default: BENCH_serving.json) as machine-readable
+                  JSON — ``{"runs": [...]}``, one record per invocation with
+                  the git rev + config, so the perf trajectory is tracked
+                  across PRs instead of overwritten
   --only NAME     run a single section (e.g. --only serving)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import time
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 - benchmarks must not die on metadata
+        return "unknown"
+
+
+def _append_history(path: str, record: dict) -> None:
+    """Append ``record`` to the run history at ``path``.
+
+    The file is ``{"benchmark": "serving", "runs": [...]}``; a pre-history
+    file (one bare record, the PR-2 format) is migrated by becoming the
+    first entry of the list.
+    """
+    record = dict(record)
+    record["git_rev"] = _git_rev()
+    record["date"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    history: dict = {"benchmark": record.get("benchmark", "serving"),
+                     "runs": []}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+            history["runs"] = prev["runs"]
+        elif isinstance(prev, dict) and prev:
+            history["runs"] = [prev]     # migrate the pre-history format
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    history["runs"].append(record)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
@@ -63,10 +106,8 @@ def main() -> None:
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
             print(f"{name}_FAILED,0,0")
     if args.json and serving_record:
-        with open(args.json, "w") as f:
-            json.dump(serving_record, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"wrote {args.json}", file=sys.stderr)
+        _append_history(args.json, serving_record)
+        print(f"appended run to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

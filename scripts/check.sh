@@ -31,4 +31,26 @@ else
     status=1
 fi
 
+echo
+echo "== overlap smoke: benchmarks.serving --smoke --overlap =="
+if PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.serving --smoke --overlap; then
+    echo "overlap smoke: OK"
+else
+    echo "overlap smoke: FAILED"
+    status=1
+fi
+
+if [ "$#" -gt 0 ]; then
+    # tier-1 was filtered by pass-through args: still guarantee the overlap
+    # suite ran (an unfiltered tier-1 run already collects it)
+    echo
+    echo "== overlap tests: tests/test_serve_overlap.py =="
+    if python -m pytest -q tests/test_serve_overlap.py; then
+        echo "overlap tests: OK"
+    else
+        echo "overlap tests: FAILED"
+        status=1
+    fi
+fi
+
 exit $status

@@ -210,6 +210,14 @@ class DeviceFuture:
     def result(self, timeout: float | None = None) -> Any:
         return self.wait(timeout=timeout)
 
+    def done(self) -> bool:
+        """Non-blocking readiness probe on the error word (the paper's
+        ``MPI_Test`` analogue): True iff ``wait()`` would return or raise
+        without blocking. Lets a serving loop distinguish a device-bound
+        pipeline (the window is still computing at retirement) from a
+        host-bound one without perturbing async dispatch."""
+        return self._waited or _is_ready(self.word)
+
     def fault_steps(self) -> Optional[np.ndarray]:
         """Per-rank index of the first faulting window step, or -1 if clean.
 

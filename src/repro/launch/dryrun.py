@@ -67,6 +67,8 @@ def _compile_variant(cfg, shape, mesh, impl, *, inner_unroll: bool = False,
         moe_mod.EXPERT_SPEC = prev_espec
         steps_mod.MB_UNROLL = prev_mb
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     return compiled, cost, coll, hlo

@@ -8,22 +8,29 @@ the (optionally compressed) cross-pod gradient reduction.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                  # jax >= 0.5: explicit axis types exist,
+    from jax.sharding import AxisType  # pin ours to Auto (GSPMD decides)
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:                   # jax 0.4.x: Auto is the only behaviour
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2, pod: int = 0):
     """Small mesh over forced host devices (tests / examples)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _mesh((pod, data, model), ("pod", "data", "model"))
+    return _mesh((data, model), ("data", "model"))
 
 
 def dp_size(mesh) -> int:

@@ -49,6 +49,11 @@ class PerfOptions:
                       (``make_decode_window``); 0 = per-token decode.
     donate          — donate caches/slot state to the decode window so XLA
                       updates them in place (no per-window cache copy).
+    overlap         — fuse admission/LFLR prefill into the decode windows
+                      (``make_prefill_decode_window``): joining or recovering
+                      sequences advance their cache by a prompt chunk *inside*
+                      the window scan, so prefill never stalls the token
+                      stream; ignored when ``window == 0``.
     """
 
     microbatch: int = 0
@@ -59,11 +64,12 @@ class PerfOptions:
     ep_constraint: bool = False   # MoE dispatch buffers constrained E-over-model
     window: int = 0
     donate: bool = True
+    overlap: bool = True
 
     @classmethod
     def parse(cls, spec: str) -> "PerfOptions":
-        """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1,window=8,donate=1'
-        → PerfOptions."""
+        """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1,window=8,donate=1,
+        overlap=1' → PerfOptions."""
         kw: dict = {}
         for part in (spec or "").split(","):
             if not part:
@@ -72,10 +78,10 @@ class PerfOptions:
             k = {"mb": "microbatch", "ce": "ce_chunk", "sp": "seq_shard",
                  "cacheseq": "cache_seq_model", "probes": "probes",
                  "ep": "ep_constraint", "win": "window", "window": "window",
-                 "donate": "donate"}[k]
+                 "donate": "donate", "overlap": "overlap"}[k]
             kw[k] = bool(int(v)) if k in ("seq_shard", "cache_seq_model",
                                           "probes", "ep_constraint",
-                                          "donate") else int(v)
+                                          "donate", "overlap") else int(v)
         return cls(**kw)
 
 
@@ -285,6 +291,112 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
         return toks, words.astype(jnp.uint32), next_tok, caches
 
     return jax.jit(window_step, donate_argnums=(1,) if donate else ())
+
+
+def make_prefill_decode_window(cfg: ModelConfig,
+                               probe_cfg: ProbeConfig | None = None, *,
+                               window: int, donate: bool = True):
+    """Fused decode+prefill window: chunked prefill rides the decode scan.
+
+    The last synchronous edge of the serving pipeline is admission / LFLR
+    re-prefill: a full-length blocking prefill between windows freezes every
+    healthy slot while one slot joins or recovers. This window step makes
+    prefill a first-class citizen of the decode window (Sarathi-style chunking
+    folded into the paper's asynchrony contract): inside the *same*
+    ``lax.scan`` dispatch, decoding slots advance by greedy feedback while a
+    joining/recovering slot consumes up to K tokens of its prompt chunk —
+    per-slot ``jnp.where`` on the input token is the only difference from
+    :func:`make_decode_window`, so a window with no chunk is computation-
+    identical (bit-exact) to the decode-only window.
+
+    Signature of the returned jitted function::
+
+      window_step(params, caches, tokens, pos, chunk, rem)
+        caches  pytree, leaves (S, ...)   donated when ``donate``
+        tokens  (S, 1, 1) int32           greedy feedback feed per slot
+        pos     (S,) int32                per-slot absolute position
+        chunk   (K, S) int32              prompt tokens to feed per step × slot
+        rem     (S,) int32                prompt-feed steps for each slot:
+                                          step k consumes ``chunk[k, s]`` iff
+                                          ``k < rem[s]``, else greedy feedback
+      → (tokens (K, S), words (K, S), next_tok (S, 1, 1), new caches)
+
+    Flip semantics: when a chunk exhausts a slot's prompt at step ``rem-1``,
+    that step's argmax — the logits after the *last* prompt token — is the
+    sequence's first generated token, and steps ``rem .. K-1`` continue greedy
+    decode for it in the same window. This is exactly the computation the
+    synchronous path performs (prefill logits → argmax → feed back), so the
+    trajectory is bit-exact vs blocking admission; the host simply knows that
+    only steps ``>= rem-1`` of that lane's token block are real. A fault
+    latched during a chunk lands in the same ``(K, slots)`` word history as
+    decode faults and is attributed to its exact ``(step, slot)`` — recovery
+    re-queues the lane without ever blocking the host.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    slot_step = make_slot_decode_step(cfg, probe_cfg)
+
+    def window_step(params, caches, tokens, pos, chunk, rem):
+        rem = jnp.asarray(rem, jnp.int32)
+
+        def body(carry, xs):
+            chunk_row, k = xs
+            caches, tok, p = carry
+            feed = (k < rem)[:, None, None]
+            inp = jnp.where(feed, chunk_row[:, None, None], tok)
+            logits, caches, words = slot_step(params, caches, inp, p)
+            nxt = jnp.argmax(logits[:, 0, 0, :], axis=-1).astype(jnp.int32)
+            return (caches, nxt[:, None, None], p + 1), (nxt, words)
+
+        (caches, next_tok, _), (toks, words) = jax.lax.scan(
+            body, (caches, jnp.asarray(tokens, jnp.int32),
+                   jnp.asarray(pos, jnp.int32)),
+            (jnp.asarray(chunk, jnp.int32),
+             jnp.arange(window, dtype=jnp.int32)))
+        return toks, words.astype(jnp.uint32), next_tok, caches
+
+    return jax.jit(window_step, donate_argnums=(1,) if donate else ())
+
+
+def make_chunked_prefill(cfg: ModelConfig,
+                         probe_cfg: ProbeConfig | None = None, *,
+                         chunk: int, donate: bool = False):
+    """Standalone chunked prefill: advance an *existing* cache by ≤C tokens.
+
+    ``chunk_step(params, cache, tokens, n, start_pos)`` for ``tokens`` of
+    static shape (B, C) feeds ``tokens[:, :n]`` (traced ``n``) through the
+    decode step starting at ``start_pos`` → ``(last logits, cache, word)``.
+    One compile serves every chunk length ≤ C.
+
+    This is the building block the fused window embeds: chaining chunks is
+    bit-identical to :func:`make_cache_prefill` over the concatenation
+    (same decode step, same positions), so a prefill split across decode
+    windows reproduces the one-shot trajectory exactly. Unlike
+    ``make_cache_prefill`` it takes the cache as an argument — the caller owns
+    allocation, which is what lets a serving lane resume a half-built cache
+    chunk by chunk.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    step_fn = make_decode_step(cfg, probe_cfg)
+
+    def chunk_step(params, cache, tokens, n, start_pos):
+        tokens = jnp.asarray(tokens, jnp.int32)
+        logits0 = jnp.zeros((tokens.shape[0], 1, cfg.vocab_size), jnp.float32)
+
+        def body(i, carry):
+            cache, word, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            logits, cache, w = step_fn(params, cache, tok,
+                                       jnp.asarray(start_pos, jnp.int32) + i)
+            return (cache, word | w, logits.astype(jnp.float32))
+
+        cache, word, logits = jax.lax.fori_loop(
+            0, jnp.asarray(n, jnp.int32), body,
+            (cache, jnp.uint32(0), logits0))
+        return logits, cache, word
+
+    return jax.jit(chunk_step, donate_argnums=(1,) if donate else ())
 
 
 def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,

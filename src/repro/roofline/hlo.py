@@ -83,7 +83,6 @@ _FUSION_RE = re.compile(r"\bfusion\(")
 # ---------------------------------------------------------------- HBM estimator
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
 _RESULT_NAME = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
 _WHILE_ATTRS = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
 _CALLS = re.compile(r"calls=%?([\w\.\-]+)")
 _CONST_INT = re.compile(r"constant\((\d+)\)")
@@ -149,8 +148,6 @@ def estimate_hbm_bytes(hlo_text: str) -> dict:
             shape_part = line.split("=", 1)[1]
             shape_part = shape_part.split(opcode + "(", 1)[0] if opm else shape_part
             rbytes = _shape_bytes(shape_part)
-            opm2 = _OPERANDS.search(line.split(opcode + "(", 1)[1]
-                                    if opm and opcode + "(" in line else "")
             operands = []
             if opm and opcode + "(" in line:
                 inner = line.split(opcode + "(", 1)[1]
@@ -163,8 +160,13 @@ def estimate_hbm_bytes(hlo_text: str) -> dict:
                         if depth == 0:
                             break
                     buf.append(ch)
-                operands = [t.strip().lstrip("%") for t in "".join(buf).split(",")
-                            if t.strip().startswith("%")]
+                # an operand token may carry its shape ("f32[256,256]{1,0}
+                # %dot.0") or be bare ("%dot.0") — take the %name wherever it
+                # sits, else operand bytes silently vanish from the estimate
+                for t in "".join(buf).split(","):
+                    nm = re.search(r"%([\w\.\-]+)", t)
+                    if nm:
+                        operands.append(nm.group(1))
             rows.append((m.group(1), opcode, rbytes, operands, line))
             for cm in _CALLS.finditer(line):
                 if opcode == "fusion":

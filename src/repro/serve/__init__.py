@@ -11,7 +11,10 @@ exceptions* at a wait, never deadlocks or aborts — to inference traffic.
 * :class:`Replica` — wraps every fused step in a ``DeviceFuture``; per-slot
   error words + the paper's enumeration give ``(slot, code)`` attribution, so
   ``STATE_FAULT`` triggers per-sequence LFLR re-prefill (recompute, don't
-  restart) and a :class:`~repro.core.recovery.RecoveryPolicy` escalates.
+  restart) and a :class:`~repro.core.recovery.RecoveryPolicy` escalates. With
+  ``window=K`` the hot path is the zero-sync decode window; with ``overlap``
+  (default) admission and LFLR ride the windows as background chunked-prefill
+  lanes — the token stream never stalls on a blocking prefill (DESIGN §3.2).
 * :class:`ServeGroup` — N replicas over the thread-rank transport; a killed
   replica raises on the survivors via the ULFM protocol, the group shrinks and
   re-routes its in-flight requests.
@@ -31,4 +34,4 @@ from .queue import (  # noqa: F401
     Response,
 )
 from .replica import Replica  # noqa: F401
-from .scheduler import ContinuousBatchingScheduler, Slot  # noqa: F401
+from .scheduler import ChunkPlan, ContinuousBatchingScheduler, Slot  # noqa: F401

@@ -39,6 +39,7 @@ from ..core.transport import RankResult
 from ..launch.steps import (
     make_cache_prefill,
     make_decode_window,
+    make_prefill_decode_window,
     make_slot_decode_step,
 )
 from ..models import build_model
@@ -144,7 +145,9 @@ class ServeGroup:
     def __init__(self, cfg, nranks: int, *, num_slots: int = 2,
                  max_len: int = 64, seed: int = 0, probe_cfg=SERVE_PROBES,
                  max_request_retries: int = 2, eos_id: Optional[int] = None,
-                 timeout: float = 30.0, window: int = 0, donate: bool = True):
+                 timeout: float = 30.0, window: int = 0, donate: bool = True,
+                 overlap: bool = True,
+                 prefill_budget: Optional[int] = None):
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
         self.cfg = cfg
@@ -155,15 +158,21 @@ class ServeGroup:
         self.max_request_retries = max_request_retries
         self.eos_id = eos_id
         self.window = int(window)
+        self.overlap = bool(self.window) and bool(overlap)
+        self.prefill_budget = prefill_budget
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
         self._decode_fn = jax.jit(make_slot_decode_step(cfg, probe_cfg))
         self._prefill_fn = make_cache_prefill(cfg, probe_cfg,
                                               fused=bool(self.window))
-        self._window_fn = (make_decode_window(cfg, probe_cfg,
-                                              window=self.window,
-                                              donate=donate)
-                           if self.window else None)
+        if not self.window:
+            self._window_fn = None
+        elif self.overlap:
+            self._window_fn = make_prefill_decode_window(
+                cfg, probe_cfg, window=self.window, donate=donate)
+        else:
+            self._window_fn = make_decode_window(
+                cfg, probe_cfg, window=self.window, donate=donate)
 
     def serve(self, requests: Sequence[Request], *,
               faults: FaultSchedule | None = None,
@@ -189,7 +198,8 @@ class ServeGroup:
                 max_request_retries=self.max_request_retries,
                 eos_id=self.eos_id,
                 decode_fn=self._decode_fn, prefill_fn=self._prefill_fn,
-                window=self.window, window_fn=self._window_fn)
+                window=self.window, window_fn=self._window_fn,
+                overlap=self.overlap, prefill_budget=self.prefill_budget)
             report = RankReport(rank=ctx.rank, metrics=replica.metrics)
             for round_i in range(max_rounds):
                 for spec in faults.at(round_i, ctx.rank):

@@ -41,6 +41,12 @@ class ServeMetrics:
         self.windows = 0                     # decode windows retired
         self.discarded_tokens = 0            # trailing tokens dropped at window
                                              # boundaries (EOS/budget/fault)
+        self.prefill_chunks = 0              # prompt chunks fused into windows
+        self.prefill_chunk_tokens = 0        # prompt tokens fed via chunks
+        self.host_stalls = 0                 # blocking prefills (admission/LFLR
+        self.host_stall_s = 0.0              # that froze the dispatch loop)
+        self.window_waits = 0                # windows not yet done at retire
+                                             # (device-bound, host keeping up)
 
     # ------------------------------------------------------------- recording
     def record_step(self, committed_tokens: int) -> None:
@@ -65,6 +71,25 @@ class ServeMetrics:
             self._tick()
             self.prefills += 1
             self.decode_tokens += committed_tokens
+
+    def record_chunk(self, tokens_fed: int) -> None:
+        """A prompt chunk fused into a decode window (overlapped prefill)."""
+        with self._lock:
+            self._tick()
+            self.prefill_chunks += 1
+            self.prefill_chunk_tokens += tokens_fed
+
+    def record_host_stall(self, seconds: float) -> None:
+        """Wall time the dispatch loop spent blocked on a synchronous prefill
+        — the stall the overlapped engine exists to eliminate."""
+        with self._lock:
+            self.host_stalls += 1
+            self.host_stall_s += max(0.0, seconds)
+
+    def record_window_wait(self) -> None:
+        """A window that was still computing when the host came to retire it."""
+        with self._lock:
+            self.window_waits += 1
 
     def _tick(self) -> None:
         now = self.clock()
@@ -113,6 +138,18 @@ class ServeMetrics:
         arr = np.asarray(lats)
         return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
 
+    def ttft_percentiles(self, ps=(50, 99)) -> dict[str, float]:
+        """Time-to-first-token percentiles over answered requests (the number
+        overlapped admission optimises: the first token of a late-admitted
+        request must not wait for a blocking full-prompt prefill)."""
+        with self._lock:
+            tt = [r.ttft_s for r in self.responses
+                  if r.status == OK and r.ttft_s is not None]
+        if not tt:
+            return {f"p{p}": float("nan") for p in ps}
+        arr = np.asarray(tt)
+        return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
     def summary(self) -> dict:
         out = {
             "requests": len(self.responses),
@@ -122,12 +159,19 @@ class ServeMetrics:
             "decode_tokens": self.decode_tokens,
             "windows": self.windows,
             "discarded_tokens": self.discarded_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
+            "host_stalls": self.host_stalls,
+            "host_stall_s": self.host_stall_s,
+            "window_waits": self.window_waits,
             "tokens_per_s": self.tokens_per_s(),
             "faults": self.fault_counts(),
             "retries": sum(r.retries for r in self.responses),
         }
         out.update({f"latency_{k}_s": v
                     for k, v in self.latency_percentiles().items()})
+        out.update({f"ttft_{k}_s": v
+                    for k, v in self.ttft_percentiles().items()})
         return out
 
     # --------------------------------------------------------------- export

@@ -19,6 +19,18 @@ discarded, freed lanes are backfilled, and the already-in-flight speculative
 window is patched — its stale lanes are marked invalid and simply skipped at
 its own retirement.
 
+With ``overlap=True`` (the default in window mode) admission and LFLR
+recovery become **background prefill lanes** driven by the scheduler: instead
+of a blocking full-length prefill between windows, a joining or recovering
+slot's pending sequence is chunked into the *fused* decode+prefill window
+(:func:`~repro.launch.steps.make_prefill_decode_window`) — the token stream
+of the healthy slots never stalls, and the lane flips to decoding inside the
+window whose chunk consumes its last pending token (bit-exact vs the blocking
+path, since both compute the first token as the argmax after the last prompt
+token through the same decode step). A fault latched during a chunk is
+attributed through the same ``(K, slots)`` history and re-queues the lane
+(cache reset + chunk from position 0) without a single host sync.
+
 Recovery is the paper's use-case 1 applied to inference:
 
 * ``STATE_FAULT`` (bit-flipped recurrent state) or non-finite logits on slot
@@ -50,6 +62,7 @@ from ..core.recovery import Action, RecoveryPolicy
 from ..launch.steps import (
     make_cache_prefill,
     make_decode_window,
+    make_prefill_decode_window,
     make_slot_decode_step,
 )
 from ..models import build_model
@@ -116,12 +129,16 @@ class _WindowInFlight:
     holds the slot at retirement. ``valid`` is cleared for a lane when the
     host patches its device state (LFLR re-prefill / backfill) while this
     window is already in flight — the lane's tokens *and its error words* are
-    then stale and are skipped wholesale at retirement.
+    then stale and are skipped wholesale at retirement. ``start`` is the first
+    committable step per lane: 0 for a decoding slot, ``rem - 1`` for a lane
+    whose prompt chunk exhausts at step ``rem - 1`` (its argmax there is the
+    first real token), K for a lane still mid-prefill (nothing committable).
     """
 
     fut: DeviceFuture
     req_ids: tuple
     valid: np.ndarray
+    start: np.ndarray
 
 
 class Replica:
@@ -139,7 +156,9 @@ class Replica:
                  decode_fn: Callable | None = None,
                  prefill_fn: Callable | None = None,
                  window: int = 0, donate: bool = True,
-                 window_fn: Callable | None = None):
+                 window_fn: Callable | None = None,
+                 overlap: bool = True,
+                 prefill_budget: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -168,7 +187,8 @@ class Replica:
         self.queue = queue or RequestQueue(
             AdmissionPolicy(max_total_len=max_len), clock=clock)
         self.sched = ContinuousBatchingScheduler(
-            num_slots, self.queue, replica=rank, eos_id=eos_id, clock=clock)
+            num_slots, self.queue, replica=rank, eos_id=eos_id, clock=clock,
+            prefill_budget=prefill_budget)
         # stacked per-sequence (batch=1) caches, leading slot axis
         one = self.model.init_cache(1, max_len)
         self.caches = jax.tree_util.tree_map(
@@ -179,10 +199,25 @@ class Replica:
         self._step_count = 0
         # ---- zero-sync decode windows (window=K > 0) ----------------------
         self.window = int(window)
+        self.overlap = bool(self.window) and bool(overlap)
         if self.window:
-            self._decode_window = window_fn or make_decode_window(
-                cfg, probe_cfg, window=self.window, donate=donate)
+            self._decode_window = window_fn or (
+                make_prefill_decode_window(cfg, probe_cfg, window=self.window,
+                                           donate=donate)
+                if self.overlap else
+                make_decode_window(cfg, probe_cfg, window=self.window,
+                                   donate=donate))
             self._wenum = make_window_enum_fn(num_slots)
+        if self.overlap:
+            # fresh per-sequence cache template + fused one-dispatch reset of
+            # one lane's slice of the stacked caches — the overlapped
+            # admission/LFLR restart point (async, never a host sync)
+            self._fresh = one
+            self._reset = jax.jit(
+                lambda full, fresh, slot: jax.tree_util.tree_map(
+                    lambda f, o: f.at[slot].set(o.astype(f.dtype)),
+                    full, fresh),
+                donate_argnums=(0,))    # in-place slice update, no cache copy
         self._pending: Optional[_WindowInFlight] = None
         # device-resident feed for the next window (token chain never leaves
         # the device) + host-tracked dispatch positions
@@ -251,9 +286,14 @@ class Replica:
                                 detail="deadline passed in queue"))
         out.extend(self.sched.expire_active(now))
         for slot, _req in self.sched.backfill(now):
-            resp = self._prefill_slot(slot)
-            if resp is not None:
-                out.append(resp)
+            if self.overlap:
+                # admission is a background lane: the scheduler chunks the
+                # prompt into subsequent decode windows — no blocking prefill
+                self.sched.begin_prefill(slot)
+            else:
+                resp = self._prefill_slot(slot)
+                if resp is not None:
+                    out.append(resp)
         if self.window:
             if self.sched.has_active() or self._pending is not None:
                 out.extend(self._window_cycle())
@@ -331,23 +371,54 @@ class Replica:
     def _dispatch_window(self) -> _WindowInFlight:
         self._step_count += 1
         sched = self.sched
+        K = self.window
         mask = sched.active_mask()
-        toks, words, next_tok, caches = self._decode_window(
-            self.params, self.caches, self._dev_tokens,
-            jnp.asarray(self._dev_pos))
+        start = np.zeros(sched.num_slots, np.int64)
+        if self.overlap:
+            chunk = np.zeros((K, sched.num_slots), np.int32)
+            rem = np.zeros((sched.num_slots,), np.int32)
+            for slot, cp in sched.plan_prefill(K).items():
+                if cp.rem == 0:
+                    # deferred fresh lane: no valid state yet — fully masked
+                    mask[slot] = 0
+                    start[slot] = K
+                    continue
+                if cp.fresh:
+                    # lane (re)start: fresh cache slice + position 0, both
+                    # queued on the device chain — never a host sync
+                    self.caches = self._reset(self.caches, self._fresh,
+                                              jnp.int32(slot))
+                    self._dev_pos[slot] = 0
+                chunk[:cp.rem, slot] = cp.tokens
+                rem[slot] = cp.rem
+                start[slot] = cp.rem - 1 if cp.exhausts else K
+                self.metrics.record_chunk(cp.rem)
+            toks, words, next_tok, caches = self._decode_window(
+                self.params, self.caches, self._dev_tokens,
+                jnp.asarray(self._dev_pos), jnp.asarray(chunk),
+                jnp.asarray(rem))
+        else:
+            toks, words, next_tok, caches = self._decode_window(
+                self.params, self.caches, self._dev_tokens,
+                jnp.asarray(self._dev_pos))
         # the device-side chain advances: window N+1 consumes these directly
         self.caches = caches
         self._dev_tokens = next_tok
-        self._dev_pos = self._dev_pos + self.window
+        self._dev_pos = self._dev_pos + K
         combined, count, table, hist = self._wenum(words, jnp.asarray(mask))
         fut = DeviceFuture(outputs=toks, word=combined, count=count,
                            table=table, history=hist)
         return _WindowInFlight(
             fut=fut,
             req_ids=tuple(s.req.id if s.active else None for s in sched.slots),
-            valid=np.ones(sched.num_slots, bool))
+            valid=np.ones(sched.num_slots, bool),
+            start=start)
 
     def _retire_window(self, win: _WindowInFlight) -> list[Response]:
+        if not win.fut.done():
+            # the device is still computing this window at its retirement —
+            # the pipeline, not the host, is the bottleneck right now
+            self.metrics.record_window_wait()
         try:
             tok_block = win.fut.wait()
         except PropagatedError as exc:
@@ -357,10 +428,12 @@ class Replica:
 
     def _commit_window(self, win: _WindowInFlight, toks: np.ndarray,
                        limits: Optional[np.ndarray] = None) -> list[Response]:
-        """Commit each lane's token block up to EOS / token budget / its fault
-        boundary (``limits``); trailing tokens are discarded. Lanes whose
-        request left the slot since dispatch (finished, expired, re-routed) or
-        whose state was patched mid-flight (``valid`` cleared) are skipped."""
+        """Commit each lane's token block from its first real step
+        (``win.start`` — past any prompt-chunk feed) up to EOS / token budget /
+        its fault boundary (``limits``); trailing tokens are discarded. Lanes
+        whose request left the slot since dispatch (finished, expired,
+        re-routed) or whose state was patched mid-flight (``valid`` cleared)
+        are skipped."""
         now = self.clock()
         K = self.window
         out: list[Response] = []
@@ -368,15 +441,16 @@ class Replica:
         for slot, rid in enumerate(win.req_ids):
             if rid is None:
                 continue                         # lane was free at dispatch
-            s = self.sched.slots[slot]
+            lo = int(win.start[slot])            # prompt-feed steps emit no
+            s = self.sched.slots[slot]           # committable tokens
             if not s.active or s.req.id != rid or not win.valid[slot]:
-                discarded += K
+                discarded += K - lo
                 continue
             limit = K if limits is None else int(limits[slot])
-            k, done = self.sched.commit_block(slot, toks[:, slot], now,
-                                              limit=limit)
+            k, done = (self.sched.commit_block(slot, toks[lo:limit, slot], now)
+                       if limit > lo else (0, None))
             committed += k
-            discarded += K - k
+            discarded += (K - lo) - k
             if done is not None:
                 out.append(done)
         self.metrics.record_window(committed, discarded, K)
@@ -433,10 +507,25 @@ class Replica:
                     # lane would re-raise this fault as a new one at retire
                     self._pending.valid[slot] = False
                 continue
-            resp = self._prefill_slot(slot)  # LFLR: recompute, don't restart
+            resp = self._lflr_slot(slot)     # LFLR: recompute, don't restart
             if resp is not None:
                 out.append(resp)
         return out
+
+    def _lflr_slot(self, slot: int) -> Optional[Response]:
+        """Window-mode LFLR recompute for one lane.
+
+        Overlapped: re-queue the lane — the scheduler chunks prompt +
+        committed tokens back into the cache through subsequent fused windows
+        (the cache reset rides the next dispatch), and the in-flight
+        speculative window's stale lane is invalidated. The host never blocks.
+        Blocking mode: the synchronous re-prefill."""
+        if not self.overlap:
+            return self._prefill_slot(slot)
+        self.sched.begin_prefill(slot)
+        if self._pending is not None:
+            self._pending.valid[slot] = False
+        return None
 
     # --------------------------------------------------------------- recovery
     def _recover(self, exc: PropagatedError, fut: DeviceFuture) -> list[Response]:
@@ -484,43 +573,54 @@ class Replica:
 
     # ---------------------------------------------------------------- prefill
     def _prefill_slot(self, slot: int) -> Optional[Response]:
-        """(Re-)compute a slot's cache from its full token history and commit
-        the next token from the prefill logits. Serves both admission and the
-        LFLR recompute — they are literally the same operation.
+        """*Blocking* (re-)compute of a slot's cache from its full token
+        history, committing the next token from the prefill logits. Serves
+        admission and the LFLR recompute on the stepwise and non-overlapped
+        window engines; the overlapped engine replaces it with background
+        lanes (``sched.begin_prefill`` + the fused window) and never blocks
+        here. The wall time spent inside — the host stall every healthy slot
+        pays — is recorded via ``metrics.record_host_stall``.
 
-        In window mode this is also the *patch point* of the double-buffered
-        pipeline: the rebuilt cache / next-token / position overwrite the
-        lane's device state (the in-flight speculative window's outputs), and
-        the lane is marked invalid in that window so its stale block is
-        skipped at retirement."""
-        tokens = np.asarray([self.sched.sequence_tokens(slot)], np.int32)
-        logits, cache, word = self._prefill(self.params, tokens, self.max_len)
-        fut = DeviceFuture(outputs=(logits, cache), word=word)
+        In (non-overlapped) window mode this is also the *patch point* of the
+        double-buffered pipeline: the rebuilt cache / next-token / position
+        overwrite the lane's device state (the in-flight speculative window's
+        outputs), and the lane is marked invalid in that window so its stale
+        block is skipped at retirement."""
+        t0 = self.clock()
         try:
-            logits, cache = fut.wait()
-        except PropagatedError as exc:
-            retries = self.sched.note_retry(slot)
-            self.metrics.record_fault(self._step_count,
-                                      int(exc.combined_code),
-                                      "prefill_retry", (slot,))
-            if retries > self.max_request_retries:
-                return self.sched.evict(
-                    slot, FAILED,
-                    detail=f"prefill faulted {retries} times: {exc}")
-            return self._prefill_slot(slot)
-        tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
-        self.caches, self._dev_tokens = self._insert(
-            self.caches, cache, jnp.int32(slot), self._dev_tokens,
-            jnp.int32(tok))
-        if not self.window:
-            # only the stepwise commit path reads logits back per slot
-            self._slot_logits = self._slot_logits.at[slot].set(
-                logits.astype(jnp.float32))
-        resp = self.sched.commit_token(slot, tok, self.clock())
-        self.metrics.record_prefill(1)
-        if self.window:
-            s = self.sched.slots[slot]
-            self._dev_pos[slot] = s.seq_len - 1 if s.active else 0
-            if self._pending is not None:
-                self._pending.valid[slot] = False
-        return resp
+            while True:
+                tokens = np.asarray([self.sched.sequence_tokens(slot)],
+                                    np.int32)
+                logits, cache, word = self._prefill(self.params, tokens,
+                                                    self.max_len)
+                fut = DeviceFuture(outputs=(logits, cache), word=word)
+                try:
+                    logits, cache = fut.wait()
+                    break
+                except PropagatedError as exc:
+                    retries = self.sched.note_retry(slot)
+                    self.metrics.record_fault(self._step_count,
+                                              int(exc.combined_code),
+                                              "prefill_retry", (slot,))
+                    if retries > self.max_request_retries:
+                        return self.sched.evict(
+                            slot, FAILED,
+                            detail=f"prefill faulted {retries} times: {exc}")
+            tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
+            self.caches, self._dev_tokens = self._insert(
+                self.caches, cache, jnp.int32(slot), self._dev_tokens,
+                jnp.int32(tok))
+            if not self.window:
+                # only the stepwise commit path reads logits back per slot
+                self._slot_logits = self._slot_logits.at[slot].set(
+                    logits.astype(jnp.float32))
+            resp = self.sched.commit_token(slot, tok, self.clock())
+            self.metrics.record_prefill(1)
+            if self.window:
+                s = self.sched.slots[slot]
+                self._dev_pos[slot] = s.seq_len - 1 if s.active else 0
+                if self._pending is not None:
+                    self._pending.valid[slot] = False
+            return resp
+        finally:
+            self.metrics.record_host_stall(self.clock() - t0)

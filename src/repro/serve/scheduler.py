@@ -21,16 +21,29 @@ from .queue import EXPIRED, OK, Request, RequestQueue, Response
 
 @dataclass
 class Slot:
-    """One decode lane. ``req is None`` ⇔ the lane is free."""
+    """One decode lane. ``req is None`` ⇔ the lane is free.
+
+    ``pending`` is the overlapped-prefill lane state: the token sequence being
+    chunked into the cache through decode windows (the prompt at admission,
+    prompt + generated at an LFLR recompute). ``pending is None`` ⇔ the slot
+    is decoding; ``prefill_pos`` counts pending tokens already dispatched to
+    the device chain.
+    """
 
     idx: int
     req: Optional[Request] = None
     generated: list[int] = field(default_factory=list)
     t_first: Optional[float] = None      # wall time of the first generated token
+    pending: Optional[list[int]] = None  # tokens being chunk-prefilled, or None
+    prefill_pos: int = 0                 # pending tokens already fed on device
 
     @property
     def active(self) -> bool:
         return self.req is not None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.pending is not None
 
     @property
     def seq_len(self) -> int:
@@ -41,6 +54,27 @@ class Slot:
         self.req = None
         self.generated = []
         self.t_first = None
+        self.pending = None
+        self.prefill_pos = 0
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """One lane's share of a decode window's prefill budget.
+
+    ``rem`` steps of the window feed ``tokens`` (prompt chunk) instead of
+    greedy feedback; ``rem == 0`` means the lane is deferred this window (it
+    must be masked out — its cache holds no valid state yet). ``exhausts``
+    marks the flip window: the lane's last pending token lands at step
+    ``rem - 1``, whose argmax is its first real generated token. ``fresh``
+    marks a lane's first chunk — the replica must reset the slot's cache (and
+    position) on device before dispatching this window.
+    """
+
+    tokens: tuple[int, ...]
+    rem: int
+    exhausts: bool
+    fresh: bool
 
 
 class ContinuousBatchingScheduler:
@@ -61,14 +95,18 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, num_slots: int, queue: RequestQueue, *,
                  replica: Optional[int] = None, eos_id: Optional[int] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 prefill_budget: Optional[int] = None):
         if num_slots < 1:
             raise ValueError("need at least one slot")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 (or None)")
         self.queue = queue
         self.slots = [Slot(i) for i in range(num_slots)]
         self.replica = replica
         self.eos_id = eos_id
         self.clock = clock
+        self.prefill_budget = prefill_budget
 
     # ---------------------------------------------------------------- queries
     @property
@@ -97,6 +135,85 @@ class ContinuousBatchingScheduler:
         s = self.slots[slot]
         assert s.req is not None
         return list(s.req.prompt) + s.generated
+
+    def prefilling_slots(self) -> list[int]:
+        return [s.idx for s in self.slots if s.prefilling]
+
+    # ------------------------------------------------- overlapped prefill lanes
+    def begin_prefill(self, slot: int) -> None:
+        """Turn a slot into a background prefill lane.
+
+        Admission and LFLR recovery are literally the same lane: the pending
+        sequence is prompt + generated-so-far (empty at admission), chunked
+        into the cache by subsequent decode windows via :meth:`plan_prefill`.
+        Re-calling on an already-prefilling lane restarts it from position 0
+        (the LFLR restart after a fault mid-chunk — the recurrent state is
+        poisoned, so the whole sequence recomputes; committed tokens are kept
+        and replayed, which is what makes the recovery bit-exact)."""
+        s = self.slots[slot]
+        assert s.req is not None, f"begin_prefill on free slot {slot}"
+        s.pending = self.sequence_tokens(slot)
+        s.prefill_pos = 0
+
+    def plan_prefill(self, window: int,
+                     budget: Optional[int] = None) -> dict[int, ChunkPlan]:
+        """Split the next window's token budget between decode and prefill.
+
+        Returns a :class:`ChunkPlan` per prefilling lane and advances each
+        planned lane's ``prefill_pos`` (the device chain consumes the chunk at
+        dispatch; a fault later rewinds via :meth:`begin_prefill`). Budgeting
+        (Sarathi-style, per window):
+
+        * an in-progress lane (``prefill_pos > 0``) always gets
+          ``min(window, remaining)`` — a half-built cache must keep advancing
+          every window it participates in, because a parked lane would decode
+          garbage into its own state (the no-park invariant);
+        * a fresh lane starts only if the remaining budget covers its first
+          chunk *whole* (a partial non-exhausting chunk would break the
+          no-park invariant); fresh lanes start oldest-arrival-first, so
+          under load the budget prioritises the TTFT of the longest-waiting
+          request;
+        * a deferred fresh lane gets ``ChunkPlan(rem=0)`` — the replica masks
+          it out of the window entirely;
+        * the effective budget is clamped to ≥ ``window``: a first chunk is
+          at most one window, so a smaller budget could never admit it and a
+          fresh lane would starve for as long as any slot keeps decoding.
+
+        ``budget=None`` means unthrottled (every lane chunks every window).
+        When a lane's chunk exhausts its pending sequence the lane flips to
+        decoding (``pending = None``) — from step ``rem - 1`` of that window
+        onwards its token block is real output.
+        """
+        budget = self.prefill_budget if budget is None else budget
+        left = float("inf") if budget is None else max(int(budget),
+                                                       int(window))
+        lanes = [s for s in self.slots if s.prefilling]
+        # in-progress first (correctness), then fresh by arrival (TTFT)
+        lanes.sort(key=lambda s: (s.prefill_pos == 0,
+                                  s.req.arrival_t if s.req.arrival_t is not None
+                                  else float("inf"), s.idx))
+        # liveness: deferring is only legal while something else makes progress
+        work = any(s.active and not s.prefilling for s in self.slots)
+        plan: dict[int, ChunkPlan] = {}
+        for s in lanes:
+            remaining = len(s.pending) - s.prefill_pos
+            n = min(window, remaining)
+            fresh = s.prefill_pos == 0
+            if fresh and n > left and work:
+                plan[s.idx] = ChunkPlan(tokens=(), rem=0, exhausts=False,
+                                        fresh=True)
+                continue
+            toks = tuple(s.pending[s.prefill_pos:s.prefill_pos + n])
+            exhausts = s.prefill_pos + n == len(s.pending)
+            plan[s.idx] = ChunkPlan(tokens=toks, rem=n, exhausts=exhausts,
+                                    fresh=fresh)
+            s.prefill_pos += n
+            left -= n
+            work = True
+            if exhausts:
+                s.pending = None
+                s.prefill_pos = 0
+        return plan
 
     # ------------------------------------------------------------- admission
     def backfill(self, now: Optional[float] = None) -> list[tuple[int, Request]]:

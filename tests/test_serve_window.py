@@ -119,8 +119,9 @@ def test_persistent_fault_evicts_without_stale_refault(env):
     rep = _replica(env, 4, num_slots=2)
     real_win = rep._decode_window
 
-    def cursed(params, caches, tokens, pos):
-        toks, words, next_tok, caches = real_win(params, caches, tokens, pos)
+    def cursed(params, caches, tokens, pos, *chunk_args):
+        toks, words, next_tok, caches = real_win(params, caches, tokens, pos,
+                                                 *chunk_args)
         words = words.at[1, 0].set(
             words[1, 0] | jnp.uint32(int(ErrorCode.STATE_FAULT)))
         return toks, words, next_tok, caches
@@ -155,13 +156,16 @@ def test_window_group_kill_zero_dropped_requests(env):
 def test_eos_midwindow_discards_trailing_and_backfills(env):
     """EOS inside a window: the lane commits up to EOS, the over-decoded
     trailing tokens are discarded, and the freed slot is backfilled at the
-    boundary."""
-    rep = _replica(env, 4, num_slots=2, eos_id=777)
+    boundary. (Blocking engine: the injected EOS step index assumes the
+    window carries no prompt chunk; the overlapped equivalent lives in
+    test_serve_overlap.py.)"""
+    rep = _replica(env, 4, num_slots=2, eos_id=777, overlap=False)
     real_win = rep._decode_window
     fired = []
 
-    def eos_at_step1(params, caches, tokens, pos):
-        toks, words, next_tok, caches = real_win(params, caches, tokens, pos)
+    def eos_at_step1(params, caches, tokens, pos, *chunk_args):
+        toks, words, next_tok, caches = real_win(params, caches, tokens, pos,
+                                                 *chunk_args)
         if not fired:           # first dispatched window only
             fired.append(True)
             toks = toks.at[1, 0].set(777)   # slot 0 emits EOS at step 1
