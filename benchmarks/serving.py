@@ -17,12 +17,17 @@ prefill stalls dominate. Rows (name, derived, us):
   * serve_{engine}_{steady|faulted}_tokens_per_s / _latency_p* / _ttft_p*;
   * serve_window_speedup   — windowed (blocking) vs stepwise, steady;
   * serve_overlap_speedup  — overlapped vs blocking windows, faulted (the
-    stall-free acceptance number: ISSUE 3 targets ≥ 1.5×).
+    stall-free acceptance number: ISSUE 3 targets ≥ 1.5×);
+  * serve_paged_*          — paged-KV capacity cell (ISSUE 4): on a
+    mixed-length workload (prompt lens 16–1024, full-attention arch) the
+    paged pool serves ≥ 2× the concurrent slots of the contiguous layout at
+    an equal HBM budget, token-bit-exact, zero dropped requests.
 
 ``python -m benchmarks.run --json`` appends the record to the run history in
 ``BENCH_serving.json`` (perf trajectory across PRs); ``python -m
-benchmarks.serving --smoke`` is the CI decode-hotpath gate and ``--smoke
---overlap`` the CI overlap gate (overlapped ≥ blocking on faulted traffic).
+benchmarks.serving --smoke`` is the CI decode-hotpath gate, ``--smoke
+--overlap`` the CI overlap gate (overlapped ≥ blocking on faulted traffic)
+and ``--smoke --paged`` the CI paged gate (bit-exact + 2× slot capacity).
 """
 from __future__ import annotations
 
@@ -46,6 +51,15 @@ ENGINES = (
     (f"window{WINDOW}_blocking", dict(window=WINDOW, overlap=False)),
     (f"window{WINDOW}_overlap", dict(window=WINDOW, overlap=True)),
 )
+
+# --- paged-KV capacity cell (full-attention arch: every KV byte is pageable) --
+PAGED_ARCH = "qwen3-1.7b"
+PAGED_PAGE = 64
+PAGED_MAX_LEN = 1088          # 17 pages: covers a 1024-token prompt + decode
+PAGED_CONTIG_SLOTS = 2        # contiguous baseline → the HBM budget
+PAGED_SLOTS = 4               # paged engine: 2× the slots, same pool bytes
+PAGED_MIXED_PROMPTS = (16, 1024, 32, 48, 64, 128, 16, 256, 32, 512, 24, 96)
+PAGED_MAX_NEW = 16
 
 
 def _serve_once(engine_kw: dict, fault_every: int = 0,
@@ -92,6 +106,101 @@ def _serve_once(engine_kw: dict, fault_every: int = 0,
                                      if wall > 0 else 0.0)
     summary["faults_injected"] = injected
     return summary
+
+
+def _serve_mixed(prompts, *, paged: bool, num_slots: int, max_len: int,
+                 page_budget=None, max_new: int = PAGED_MAX_NEW):
+    """Serve a mixed-length workload on the full-attention arch; returns the
+    metrics summary. ``paged=False`` is the contiguous HBM-budget baseline;
+    ``paged=True`` shares the same pool bytes across more slots. (Faulted
+    paged traffic is gated by ``--smoke --paged`` and tests — this cell
+    measures capacity.)"""
+    cfg = smoke_config(PAGED_ARCH)
+    rep = Replica(cfg, num_slots=num_slots, max_len=max_len, window=WINDOW,
+                  overlap=True, max_request_retries=6, paged=paged,
+                  page_size=PAGED_PAGE, page_budget=page_budget)
+    rep.warmup(max_new=max_new)
+    for i, plen in enumerate(prompts):
+        rej = rep.submit(Request(
+            id=i, prompt=tuple(3 + (i + j) % 200 for j in range(plen)),
+            max_new_tokens=max_new))
+        assert rej is None, rej
+    t0 = time.monotonic()
+    n_ok = 0
+    while not rep.idle():
+        n_ok += sum(r.status == "ok" for r in rep.step())
+    wall = time.monotonic() - t0
+    s = rep.metrics.summary()
+    assert n_ok == len(prompts), s["statuses"]
+    s["wall_s"] = wall
+    s["tokens_per_s_timed"] = s["decode_tokens"] / wall if wall > 0 else 0.0
+    if paged:
+        rep.alloc.check()
+        s["hbm_cache_bytes"] = rep.layout.pool_bytes()
+    else:
+        # contiguous: every slot owns a full-capacity block
+        from repro.launch.paging import PagedLayout
+        from repro.models import build_model
+        layout = PagedLayout(build_model(cfg).init_cache(1, max_len), max_len,
+                             page_size=PAGED_PAGE, num_pages=1)
+        s["hbm_cache_bytes"] = (num_slots
+                               * layout.contiguous_paged_bytes_per_slot())
+    return s
+
+
+def bench_paged_capacity():
+    """ISSUE-4 acceptance cell: mixed prompt lengths 16–1024 on a pure
+    full-attention arch. The contiguous layout fits ``PAGED_CONTIG_SLOTS``
+    slots in the HBM budget; the paged pool serves ``PAGED_SLOTS`` (2×)
+    concurrent slots on the *same* bytes, zero dropped requests."""
+    budget_pages = PAGED_CONTIG_SLOTS * (PAGED_MAX_LEN // PAGED_PAGE)
+    contig = _serve_mixed(PAGED_MIXED_PROMPTS, paged=False,
+                          num_slots=PAGED_CONTIG_SLOTS,
+                          max_len=PAGED_MAX_LEN)
+    paged = _serve_mixed(PAGED_MIXED_PROMPTS, paged=True,
+                         num_slots=PAGED_SLOTS, max_len=PAGED_MAX_LEN,
+                         page_budget=budget_pages)
+    assert paged["hbm_cache_bytes"] <= contig["hbm_cache_bytes"], (
+        "paged pool exceeds the contiguous HBM budget")
+    ratio = paged["peak_active_slots"] / max(contig["peak_active_slots"], 1)
+    assert ratio >= 2.0, (
+        f"paged engine sustained only {paged['peak_active_slots']} concurrent "
+        f"slots vs {contig['peak_active_slots']} contiguous — "
+        "the capacity win has regressed")
+    record = {
+        "arch": f"{PAGED_ARCH}(smoke)",
+        "page_size": PAGED_PAGE,
+        "max_len": PAGED_MAX_LEN,
+        "pool_pages": budget_pages,
+        "hbm_budget_bytes": contig["hbm_cache_bytes"],
+        "prompt_lens": list(PAGED_MIXED_PROMPTS),
+        "slot_capacity_ratio": ratio,
+        "contiguous": {
+            "num_slots": PAGED_CONTIG_SLOTS,
+            "tokens_per_s": contig["tokens_per_s_timed"],
+            "peak_active_slots": contig["peak_active_slots"],
+            "latency_p99_s": contig["latency_p99_s"],
+        },
+        "paged": {
+            "num_slots": PAGED_SLOTS,
+            "tokens_per_s": paged["tokens_per_s_timed"],
+            "peak_active_slots": paged["peak_active_slots"],
+            "latency_p99_s": paged["latency_p99_s"],
+            "page_evictions": paged["page_evictions"],
+            "peak_pages_in_use": paged["peak_pages_in_use"],
+        },
+    }
+    rows = [
+        ("serve_paged_capacity_ratio",
+         f"{ratio:.1f}x_slots_at_equal_hbm", 0.0),
+        ("serve_paged_mixed_tokens_per_s",
+         f"{paged['tokens_per_s_timed']:.0f}tok/s_"
+         f"{paged['peak_active_slots']}slots", 0.0),
+        ("serve_contig_mixed_tokens_per_s",
+         f"{contig['tokens_per_s_timed']:.0f}tok/s_"
+         f"{contig['peak_active_slots']}slots", 0.0),
+    ]
+    return rows, record
 
 
 def bench_all():
@@ -157,6 +266,9 @@ def bench_all():
                  f"{record['speedup_steady']:.2f}x_steady", 0.0))
     rows.append(("serve_overlap_speedup",
                  f"{record['overlap_speedup_faulted']:.2f}x_faulted", 0.0))
+    paged_rows, paged_record = bench_paged_capacity()
+    rows.extend(paged_rows)
+    record["paged"] = paged_record
     return rows, record
 
 
@@ -205,12 +317,89 @@ def smoke_overlap(window: int = WINDOW) -> None:
         f"({b:.0f} tok/s) — chunked-prefill fusion has regressed")
 
 
+def smoke_paged(window: int = WINDOW) -> None:
+    """CI paged gate: the paged engine must be token-bit-exact vs the
+    contiguous overlap engine on identical (steady *and* faulted) traffic,
+    never stall the host, and sustain ≥ 2× the contiguous slot count on a
+    mixed-length workload at an equal HBM budget — small-scale versions of
+    the ISSUE-4 acceptance criteria."""
+    cfg = smoke_config(PAGED_ARCH)
+    max_len, page = 64, 16
+
+    def serve(paged, inject_at=None):
+        rep = Replica(cfg, num_slots=2, max_len=max_len, window=window,
+                      overlap=True, max_request_retries=6, paged=paged,
+                      page_size=page)
+        reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(9)),
+                        max_new_tokens=16) for i in range(5)]
+        for r in reqs:
+            assert rep.submit(r) is None
+        out, steps = {}, 0
+        while not rep.idle():
+            if steps == inject_at:
+                # poison a decoding lane both engines will actually consume
+                eligible = [i for i in rep.sched.active_slots()
+                            if rep.sched.slots[i].pending is None]
+                if eligible:
+                    rep.inject_state_fault(eligible[0])
+            for resp in rep.step():
+                out[resp.id] = resp
+            steps += 1
+            assert steps < 2000
+        assert all(r.status == "ok" for r in out.values())
+        if paged:
+            rep.alloc.check()
+        return rep, out
+
+    for label, inject_at in (("steady", None), ("faulted", 8)):
+        _, base = serve(False, inject_at)
+        rep, got = serve(True, inject_at)
+        assert sorted(got) == sorted(base)
+        for i in base:
+            assert got[i].tokens == base[i].tokens, (
+                f"paged engine diverged from contiguous on {label} traffic "
+                f"(request {i})")
+        assert rep.metrics.host_stalls == 0, "paged engine stalled the host"
+        print(f"paged smoke ({label}): bit-exact over {len(base)} requests")
+
+    # capacity: mixed lens, 2× slots on the contiguous pool byte budget
+    budget_pages = 2 * (max_len // page)
+    prompts = (4, 40, 8, 12, 6, 32, 10, 8)
+
+    def mixed(paged, slots):
+        rep = Replica(cfg, num_slots=slots, max_len=max_len, window=window,
+                      overlap=True, paged=paged, page_size=page,
+                      page_budget=budget_pages if paged else None)
+        for i, plen in enumerate(prompts):
+            assert rep.submit(Request(
+                id=i, prompt=tuple(3 + i + j for j in range(plen)),
+                max_new_tokens=8)) is None
+        steps = 0
+        n_ok = 0
+        while not rep.idle():
+            n_ok += sum(r.status == "ok" for r in rep.step())
+            steps += 1
+            assert steps < 4000
+        assert n_ok == len(prompts), "dropped requests under paging pressure"
+        return rep.metrics.peak_active_slots
+
+    contig_peak = mixed(False, 2)
+    paged_peak = mixed(True, 4)
+    print(f"paged smoke (capacity): {paged_peak} concurrent slots paged vs "
+          f"{contig_peak} contiguous at equal HBM budget")
+    assert paged_peak >= 2 * contig_peak, (
+        f"paged engine sustained {paged_peak} slots vs {contig_peak} "
+        "contiguous — the capacity win has regressed")
+
+
 if __name__ == "__main__":
     import sys
 
     if "--smoke" in sys.argv:
         if "--overlap" in sys.argv:
             smoke_overlap()
+        elif "--paged" in sys.argv:
+            smoke_paged()
         else:
             smoke()
     else:

@@ -1,56 +1,93 @@
 #!/usr/bin/env bash
-# Local CI gate: tier-1 tests + serving smoke.
+# Local CI gate: tier-1 tests + serving smokes + bench-regression tripwire.
 #
-#   scripts/check.sh             # full suite + smoke
-#   scripts/check.sh -k serve    # pass pytest args through
+#   scripts/check.sh                 # full suite + all smokes + bench gate
+#   scripts/check.sh --fast          # tier-1 tests only (quick pre-push loop)
+#   scripts/check.sh -k serve        # pass pytest args through
+#   JUNIT_XML=out.xml scripts/check.sh   # also write pytest junit XML (CI)
 #
-# Runs both stages even if the first fails, then exits nonzero if either did.
+# Runs every stage even if an earlier one fails, prints per-stage wall-clock
+# timing, then exits nonzero if any stage did.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 status=0
+FAST=0
+PYTEST_ARGS=()
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) PYTEST_ARGS+=("$arg") ;;
+    esac
+done
 
-echo "== tier-1: python -m pytest -q $* =="
-python -m pytest -q "$@" || status=1
-
-echo
-echo "== serve smoke: examples/serve_with_faults.py =="
-if python examples/serve_with_faults.py > /dev/null; then
-    echo "serve smoke: OK"
-else
-    echo "serve smoke: FAILED"
-    status=1
-fi
-
-echo
-echo "== decode-hotpath smoke: benchmarks.serving --smoke =="
-if PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.serving --smoke; then
-    echo "decode-hotpath smoke: OK"
-else
-    echo "decode-hotpath smoke: FAILED"
-    status=1
-fi
-
-echo
-echo "== overlap smoke: benchmarks.serving --smoke --overlap =="
-if PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.serving --smoke --overlap; then
-    echo "overlap smoke: OK"
-else
-    echo "overlap smoke: FAILED"
-    status=1
-fi
-
-if [ "$#" -gt 0 ]; then
-    # tier-1 was filtered by pass-through args: still guarantee the overlap
-    # suite ran (an unfiltered tier-1 run already collects it)
-    echo
-    echo "== overlap tests: tests/test_serve_overlap.py =="
-    if python -m pytest -q tests/test_serve_overlap.py; then
-        echo "overlap tests: OK"
+# stage NAME CMD...: run CMD, report [stage] NAME: OK|FAILED (12.3s)
+stage() {
+    local name="$1"; shift
+    local t0 t1
+    t0=$(date +%s.%N)
+    if "$@"; then
+        local rc=0
     else
-        echo "overlap tests: FAILED"
+        local rc=1
         status=1
     fi
+    t1=$(date +%s.%N)
+    local dt
+    dt=$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.1f", b - a }')
+    if [ "$rc" -eq 0 ]; then
+        echo "[stage] $name: OK (${dt}s)"
+    else
+        echo "[stage] $name: FAILED (${dt}s)"
+    fi
+    echo
+}
+
+run_pytest() {
+    local junit=()
+    if [ -n "${JUNIT_XML:-}" ]; then
+        junit=(--junitxml "$JUNIT_XML")
+    fi
+    python -m pytest -q ${junit[@]+"${junit[@]}"} \
+        ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
+}
+
+run_example() { python examples/serve_with_faults.py > /dev/null; }
+
+run_bench_smoke() {
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.serving --smoke "$@"
+}
+
+echo "== tier-1: python -m pytest -q ${PYTEST_ARGS[*]:-} =="
+stage "tier-1 tests" run_pytest
+
+if [ "$FAST" -eq 1 ]; then
+    echo "(--fast: skipping smokes + bench gate)"
+    exit $status
+fi
+
+echo "== serve smoke: examples/serve_with_faults.py =="
+stage "serve smoke" run_example
+
+echo "== decode-hotpath smoke: benchmarks.serving --smoke =="
+stage "decode-hotpath smoke" run_bench_smoke
+
+echo "== overlap smoke: benchmarks.serving --smoke --overlap =="
+stage "overlap smoke" run_bench_smoke --overlap
+
+echo "== paged smoke: benchmarks.serving --smoke --paged =="
+stage "paged smoke" run_bench_smoke --paged
+
+echo "== bench-regression gate: scripts/bench_gate.py =="
+stage "bench gate" python scripts/bench_gate.py
+
+if [ "${#PYTEST_ARGS[@]}" -gt 0 ]; then
+    # tier-1 was filtered by pass-through args: still guarantee the serving
+    # suites ran (an unfiltered tier-1 run already collects them)
+    echo "== serve tests: tests/test_serve_overlap.py tests/test_serve_paged.py =="
+    stage "serve tests" python -m pytest -q tests/test_serve_overlap.py \
+        tests/test_serve_paged.py tests/test_page_allocator.py
 fi
 
 exit $status

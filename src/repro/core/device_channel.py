@@ -232,6 +232,23 @@ class DeviceFuture:
         bad = hist != 0
         return np.where(bad.any(axis=0), bad.argmax(axis=0), -1).astype(np.int64)
 
+    def fault_codes(self) -> Optional[np.ndarray]:
+        """Per-rank OR of the window history — the combined fault class each
+        rank/slot latched, or 0 if clean. Unlike the enumeration table (whose
+        capacity is ``max_errors``), this never truncates, so a host that must
+        pick a per-slot recovery lane (e.g. the paged-KV replica separating
+        ``PAGE_FAULT`` ledger repairs from ``STATE_FAULT`` recomputes) can
+        attribute every slot even under a burst of simultaneous faults.
+        Requires window ``history``; returns a ``(ranks,)`` uint32 array.
+        """
+        if self.history is None:
+            return None
+        hist = np.asarray(jax.device_get(self.history)).astype(np.uint32)
+        out = np.zeros(hist.shape[1], np.uint32)
+        for row in hist:
+            out |= row
+        return out
+
     def _errors(self, word: int) -> list[RankError]:
         if self.count is None or self.table is None:
             return []

@@ -49,6 +49,8 @@ class ErrorCode(enum.IntFlag):
     # -- structural / runtime -----------------------------------------------------
     STRAGGLER = 1 << 16            # step-time watchdog tripped on this rank
     CHECKPOINT_IO = 1 << 17        # async checkpoint write failed
+    PAGE_FAULT = 1 << 18           # paged KV: write landed on an unmapped page
+                                   # (ownership-ledger / page-table corruption)
     # -- hard faults (ULFM territory) ---------------------------------------------
     RANK_FAILED = 1 << 24          # peer process/node lost
     COMM_CORRUPTED = 1 << 25       # communicator destroyed during unwinding

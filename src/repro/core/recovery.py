@@ -96,6 +96,11 @@ class RecoveryPolicy:
         if code & ErrorCode.STATE_FAULT:
             return RecoveryDecision(Action.RESTORE_GOOD,
                                     reason="recurrent-state fault: LFLR restore")
+        if code & ErrorCode.PAGE_FAULT:
+            # paged-KV ownership violation: reclaiming + re-acquiring the
+            # sequence's pages (the serving LFLR lane) rebuilds the mapping
+            return RecoveryDecision(Action.RESTORE_GOOD,
+                                    reason="page-ownership fault: reclaim + LFLR")
         if code & ErrorCode.ROUTER_OVERFLOW:
             return RecoveryDecision(Action.CONTINUE, reason="router overflow: logged")
         if code & ErrorCode.STRAGGLER:

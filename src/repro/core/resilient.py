@@ -175,6 +175,11 @@ class ResilientExecutor:
     # ------------------------------------------------------------------ watchdog
     def _watchdog(self, step: int, dt: float) -> None:
         cfg = self.config
+        if step == 0:
+            # step 0 is dominated by jit compile: seeding the EMA with it
+            # inflates the threshold by orders of magnitude and masks real
+            # stragglers for the first ~10 steps of every run
+            return
         if self._ema_step_time is None:
             self._ema_step_time = dt
             return

@@ -1,0 +1,279 @@
+"""Paged KV/state pool: device-resident page table over a shared page pool.
+
+The serving cache layout of PR 1–3 gives every decode slot one contiguous
+``max_len`` block, so a 16-token chat reserves as much HBM as a 2k-token
+prompt — concurrency is capped by the *worst-case* sequence, not the actual
+traffic. This module applies the paper's core move — scope state to the
+smallest recoverable unit — to cache memory (vLLM-style paging):
+
+* leaves of the per-slot cache whose capacity dimension equals ``max_len``
+  (full-attention K/V) are pooled into ``(num_pages, page_size, ...)`` arrays
+  shared by all slots;
+* a ``(slots, max_pages)`` int32 **page table** maps each slot's logical page
+  to a physical page; unassigned entries hold the out-of-range sentinel
+  ``num_pages``;
+* ring buffers (sliding-window KV) and O(1) recurrent states (SSM / RG-LRU)
+  stay densely stacked per slot — paging them buys nothing, every entry is
+  always live.
+
+Addressing is gather/scatter with *explicit* out-of-bounds semantics, which
+is what makes the paged engine token-bit-exact vs the contiguous layout and
+fault-safe against cross-slot pollution:
+
+* **gather** uses ``pool.at[table].get(mode="fill", fill_value=0)`` — an
+  unassigned logical page reads as zeros, exactly the content of a freshly
+  reset contiguous cache, so attention over the gathered view computes the
+  same bits;
+* **scatter** uses ``pool.at[table].set(..., mode="drop")`` — a lane that
+  owns no page (a deferred or just-reclaimed prefill lane) writes *nowhere*:
+  a poisoned lane's NaNs can never leak into a page another slot might read;
+* the **page probe** (:meth:`PagedLayout.probe`) checks in-band that the page
+  a step writes to is mapped, OR-ing :data:`~repro.core.errors.ErrorCode`
+  ``PAGE_FAULT`` into the slot's error word — ledger corruption surfaces as
+  an exception at the wait, like every other fault in this codebase, and the
+  LFLR re-queue (free + re-acquire pages) repairs it.
+
+Ownership (free list, per-slot ledger, watermark admission, eviction) is host
+logic and lives in :class:`repro.serve.scheduler.PageAllocator`; this module
+is the device side only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.errors import ErrorCode
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Physical pages needed to hold ``n_tokens`` cache positions."""
+    return -(-max(int(n_tokens), 0) // page_size)
+
+
+@dataclass(frozen=True)
+class _LeafSpec:
+    cap_axis: int        # capacity axis in the *per-slot* leaf (== ndim - 3)
+    page_shape: tuple    # per-page shape (per-slot shape with cap → page_size)
+    dtype: Any
+
+
+class PagedLayout:
+    """Device-side layout: which cache leaves are pooled, and how to address them.
+
+    Built from one per-slot (batch=1) cache tree. A leaf is **paged** iff it
+    is a K/V buffer (dict key ``"k"``/``"v"``) whose capacity axis (always
+    ``ndim - 3`` for KV layouts ``(..., cap, n_kv, head_dim)``) has size
+    ``max_len`` — full-attention caches. Sliding-window rings
+    (``cap < max_len``) and non-KV state stay dense.
+    """
+
+    def __init__(self, slot_cache: Any, max_len: int, *, page_size: int,
+                 num_pages: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size != 0:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size}) so the gathered view is exactly the "
+                "contiguous layout")
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.max_len = int(max_len)
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+        self.max_pages = max_len // page_size
+        self.sentinel = self.num_pages           # out-of-range ⇒ fill/drop
+        # positions one sequence can ever hold state for: a pool smaller than
+        # max_len bounds every lane (admission must clamp to this too) — and
+        # growth/probing past it would demand pages that cannot exist
+        self.capacity_tokens = min(self.max_len,
+                                   self.num_pages * self.page_size)
+        shapes = jax.eval_shape(lambda t: t, slot_cache)
+        self._specs: dict[str, _LeafSpec] = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            if not self._leaf_is_paged(path, leaf):
+                continue
+            c = leaf.ndim - 3
+            page_shape = (leaf.shape[:c] + (self.page_size,)
+                          + leaf.shape[c + 1:])
+            self._specs[jax.tree_util.keystr(path)] = _LeafSpec(
+                cap_axis=c, page_shape=page_shape, dtype=leaf.dtype)
+
+    # ------------------------------------------------------------ classification
+    def _leaf_is_paged(self, path, leaf) -> bool:
+        keys = [getattr(k, "key", None) for k in path]
+        return (keys and keys[-1] in ("k", "v") and leaf.ndim >= 3
+                and leaf.shape[leaf.ndim - 3] == self.max_len)
+
+    @property
+    def has_paged_leaves(self) -> bool:
+        return bool(self._specs)
+
+    def _spec(self, path) -> Optional[_LeafSpec]:
+        return self._specs.get(jax.tree_util.keystr(path))
+
+    def is_paged_path(self, path) -> bool:
+        return self._spec(path) is not None
+
+    # ----------------------------------------------------------------- building
+    def init_hybrid(self, slot_cache: Any, num_slots: int) -> Any:
+        """Hybrid cache tree: paged leaves → ``(num_pages, *page_shape)``
+        pools, dense leaves → ``(num_slots, *per_slot)`` stacks (the PR-1
+        layout). Same tree structure as the contiguous stacked caches."""
+
+        def build(path, leaf):
+            spec = self._spec(path)
+            if spec is not None:
+                return jnp.zeros((self.num_pages, *spec.page_shape),
+                                 spec.dtype)
+            return jnp.broadcast_to(leaf[None],
+                                    (num_slots, *leaf.shape)).copy()
+
+        return jax.tree_util.tree_map_with_path(build, slot_cache)
+
+    def empty_table(self, num_slots: int):
+        import numpy as np
+        return np.full((num_slots, self.max_pages), self.sentinel, np.int32)
+
+    # ----------------------------------------------------------- gather/scatter
+    def gather(self, hybrid: Any, table) -> Any:
+        """Hybrid tree + ``(S, max_pages)`` table → per-slot stacked view tree
+        (identical in shape and **bits** to the contiguous layout: unassigned
+        pages read as zeros)."""
+
+        def g(path, leaf):
+            spec = self._spec(path)
+            if spec is None:
+                return leaf
+            v = leaf.at[table].get(mode="fill", fill_value=0)
+            v = jnp.moveaxis(v, 1, spec.cap_axis + 1)    # (S, ..., M, page, ..)
+            s = v.shape
+            c = spec.cap_axis + 1
+            return v.reshape(*s[:c], s[c] * s[c + 1], *s[c + 2:])
+
+        return jax.tree_util.tree_map_with_path(g, hybrid)
+
+    def scatter(self, hybrid: Any, views: Any, table) -> Any:
+        """Write per-slot views back through the page table. Entries mapped to
+        the sentinel are dropped — an unmapped lane writes nowhere."""
+        flat_h, treedef = jax.tree_util.tree_flatten_with_path(hybrid)
+        flat_v = jax.tree_util.tree_leaves(views)
+
+        out = []
+        for (path, leaf), view in zip(flat_h, flat_v):
+            spec = self._spec(path)
+            if spec is None:
+                out.append(view)
+                continue
+            c = spec.cap_axis + 1
+            s = view.shape
+            v = view.reshape(*s[:c], self.max_pages, self.page_size,
+                             *s[c + 1:])
+            v = jnp.moveaxis(v, c, 1)                    # (S, M, *page_shape)
+            out.append(leaf.at[table].set(v.astype(leaf.dtype), mode="drop"))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def gather_slot(self, hybrid: Any, row, slot) -> Any:
+        """Single-slot view: ``row`` is that slot's ``(max_pages,)`` table row."""
+
+        def g(path, leaf):
+            spec = self._spec(path)
+            if spec is None:
+                return leaf[slot]
+            v = leaf.at[row].get(mode="fill", fill_value=0)  # (M, *page_shape)
+            v = jnp.moveaxis(v, 0, spec.cap_axis)
+            s = v.shape
+            c = spec.cap_axis
+            return v.reshape(*s[:c], s[c] * s[c + 1], *s[c + 2:])
+
+        return jax.tree_util.tree_map_with_path(g, hybrid)
+
+    def scatter_slot(self, hybrid: Any, view: Any, row, slot) -> Any:
+        flat_h, treedef = jax.tree_util.tree_flatten_with_path(hybrid)
+        flat_v = jax.tree_util.tree_leaves(view)
+        out = []
+        for (path, leaf), v in zip(flat_h, flat_v):
+            spec = self._spec(path)
+            if spec is None:
+                out.append(leaf.at[slot].set(v.astype(leaf.dtype)))
+                continue
+            c = spec.cap_axis
+            s = v.shape
+            v = v.reshape(*s[:c], self.max_pages, self.page_size, *s[c + 1:])
+            v = jnp.moveaxis(v, c, 0)
+            out.append(leaf.at[row].set(v.astype(leaf.dtype), mode="drop"))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------- probes
+    def probe(self, table, pos) -> jax.Array:
+        """In-band page-ownership probe: per-slot PAGE_FAULT word iff *any*
+        logical page up to (and including) the one holding the slot's current
+        write position is unmapped — an unmapped write page drops the new
+        KV entry, and an unmapped earlier page silently reads as zeros, so
+        both are table/ledger divergence that must surface at the wait
+        rather than corrupt the stream. Free / deferred lanes are masked out
+        by the caller's enumeration mask, like every other per-slot word."""
+        pos = jnp.asarray(pos, jnp.int32)
+        if not self._specs:
+            return jnp.zeros(pos.shape, jnp.uint32)
+        # clamp to pool capacity: positions past it are over-decode steps
+        # whose tokens are discarded at retirement — their dropped writes are
+        # not ledger divergence (growth never maps pages that can't exist)
+        lp = jnp.clip(pos, 0, self.capacity_tokens - 1) // self.page_size
+        live = jnp.arange(self.max_pages)[None, :] <= lp[:, None]
+        unmapped = (table < 0) | (table >= self.num_pages)
+        bad = jnp.any(live & unmapped, axis=1)
+        return jnp.where(bad, jnp.uint32(int(ErrorCode.PAGE_FAULT)),
+                         jnp.uint32(0))
+
+    # -------------------------------------------------------------- maintenance
+    def scrub(self, hybrid: Any, page_ids) -> Any:
+        """Zero the given physical pages in every pool (sentinel entries are
+        dropped). This is the paged analogue of the fused fresh-cache reset:
+        it rides the device chain at (re)allocation, so a page recycled from
+        a faulted or evicted sequence can never leak stale state — including
+        NaNs — to its next owner."""
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+
+        def s(path, leaf):
+            if self._spec(path) is None:
+                return leaf
+            return leaf.at[page_ids].set(jnp.zeros((), leaf.dtype),
+                                         mode="drop")
+
+        return jax.tree_util.tree_map_with_path(s, hybrid)
+
+    def reset_slot(self, hybrid: Any, fresh: Any, slot) -> Any:
+        """Reset one slot's *dense* leaves to the fresh per-slot cache; pools
+        are untouched (their reset is :meth:`scrub` of the slot's pages). The
+        pair is the paged analogue of the contiguous fused cache reset that
+        the overlapped admission/LFLR lane rides on the device chain."""
+
+        def r(path, leaf, f):
+            if self._spec(path) is not None:
+                return leaf
+            return leaf.at[slot].set(f.astype(leaf.dtype))
+
+        return jax.tree_util.tree_map_with_path(r, hybrid, fresh)
+
+    # -------------------------------------------------------------- accounting
+    def page_bytes(self) -> int:
+        """HBM bytes of ONE physical page across all pooled leaves."""
+        total = 0
+        for spec in self._specs.values():
+            n = 1
+            for d in spec.page_shape:
+                n *= d
+            total += n * jnp.dtype(spec.dtype).itemsize
+        return total
+
+    def pool_bytes(self) -> int:
+        return self.num_pages * self.page_bytes()
+
+    def contiguous_paged_bytes_per_slot(self) -> int:
+        """Bytes ONE slot's paged leaves occupy in the contiguous layout
+        (= max_pages pages) — the equal-HBM-budget comparison baseline."""
+        return self.max_pages * self.page_bytes()

@@ -54,6 +54,10 @@ class PerfOptions:
                       sequences advance their cache by a prompt chunk *inside*
                       the window scan, so prefill never stalls the token
                       stream; ignored when ``window == 0``.
+    page            — paged KV pool page size for serving (``launch.paging``):
+                      full-attention caches become a shared page pool addressed
+                      through a per-slot page table, so long prompts and short
+                      chats share HBM; 0 = one contiguous block per slot.
     """
 
     microbatch: int = 0
@@ -65,11 +69,12 @@ class PerfOptions:
     window: int = 0
     donate: bool = True
     overlap: bool = True
+    page: int = 0
 
     @classmethod
     def parse(cls, spec: str) -> "PerfOptions":
         """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1,window=8,donate=1,
-        overlap=1' → PerfOptions."""
+        overlap=1,page=16' → PerfOptions."""
         kw: dict = {}
         for part in (spec or "").split(","):
             if not part:
@@ -78,7 +83,8 @@ class PerfOptions:
             k = {"mb": "microbatch", "ce": "ce_chunk", "sp": "seq_shard",
                  "cacheseq": "cache_seq_model", "probes": "probes",
                  "ep": "ep_constraint", "win": "window", "window": "window",
-                 "donate": "donate", "overlap": "overlap"}[k]
+                 "donate": "donate", "overlap": "overlap",
+                 "page": "page"}[k]
             kw[k] = bool(int(v)) if k in ("seq_shard", "cache_seq_model",
                                           "probes", "ep_constraint",
                                           "donate", "overlap") else int(v)
@@ -244,8 +250,29 @@ def make_slot_decode_step(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None
                     in_axes=(None, 0, 0, 0))
 
 
+def _paged_slot_step(slot_step, paged):
+    """Wrap the vmapped slot-decode step with page-table addressing.
+
+    ``hybrid`` is the paged cache tree (pools + dense stacks); ``table`` the
+    ``(S, max_pages)`` page table. Gather builds each slot's contiguous view
+    (unmapped pages read as zeros — bit-identical to a fresh contiguous
+    cache), the unchanged slot step runs on the views, and scatter writes
+    them back through the table (unmapped pages dropped, so a lane that owns
+    no pages writes nowhere). The in-band page probe ORs ``PAGE_FAULT`` into
+    the slot's word iff the position being written is unmapped.
+    """
+
+    def step(params, hybrid, tokens, pos, table):
+        views = paged.gather(hybrid, table)
+        logits, views, words = slot_step(params, views, tokens, pos)
+        hybrid = paged.scatter(hybrid, views, table)
+        return logits, hybrid, words | paged.probe(table, pos)
+
+    return step
+
+
 def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
-                       *, window: int, donate: bool = True):
+                       *, window: int, donate: bool = True, paged=None):
     """Pipelined decode window: K fused slot-decode steps in one device program.
 
     The serving hot path must not pay a host-device round trip per token — the
@@ -273,10 +300,35 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
     ``next_tok``/``new caches`` let the replica dispatch window N+1 *before*
     reading back window N's token block (double-buffered commit loop): the
     chain's data dependencies live entirely on device.
+
+    With ``paged`` (a :class:`~repro.launch.paging.PagedLayout`) the caches
+    argument is the hybrid pool tree and the function takes a trailing
+    ``table (S, max_pages) int32`` page-table argument; gather/scatter page
+    addressing runs *inside* the window scan, so the zero-sync on-device
+    token chain is untouched and the produced tokens are bit-exact vs the
+    contiguous layout.
     """
     if window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
     slot_step = make_slot_decode_step(cfg, probe_cfg)
+
+    if paged is not None:
+        pstep = _paged_slot_step(slot_step, paged)
+
+        def paged_window_step(params, hybrid, tokens, pos, table):
+            def body(carry, _):
+                hybrid, tok, p = carry
+                logits, hybrid, words = pstep(params, hybrid, tok, p, table)
+                nxt = jnp.argmax(logits[:, 0, 0, :], axis=-1).astype(jnp.int32)
+                return (hybrid, nxt[:, None, None], p + 1), (nxt, words)
+
+            (hybrid, next_tok, _), (toks, words) = jax.lax.scan(
+                body, (hybrid, jnp.asarray(tokens, jnp.int32),
+                       jnp.asarray(pos, jnp.int32)), None, length=window)
+            return toks, words.astype(jnp.uint32), next_tok, hybrid
+
+        return jax.jit(paged_window_step,
+                       donate_argnums=(1,) if donate else ())
 
     def window_step(params, caches, tokens, pos):
         def body(carry, _):
@@ -295,7 +347,7 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
 
 def make_prefill_decode_window(cfg: ModelConfig,
                                probe_cfg: ProbeConfig | None = None, *,
-                               window: int, donate: bool = True):
+                               window: int, donate: bool = True, paged=None):
     """Fused decode+prefill window: chunked prefill rides the decode scan.
 
     The last synchronous edge of the serving pipeline is admission / LFLR
@@ -331,10 +383,41 @@ def make_prefill_decode_window(cfg: ModelConfig,
     latched during a chunk lands in the same ``(K, slots)`` word history as
     decode faults and is attributed to its exact ``(step, slot)`` — recovery
     re-queues the lane without ever blocking the host.
+
+    With ``paged`` the caches argument is the hybrid pool tree and the
+    function takes a trailing ``table`` page-table argument (see
+    :func:`make_decode_window`); a chunking lane writes its prompt through
+    the same gather/scatter addressing, so admission and LFLR page
+    re-acquisition ride the window exactly like the contiguous engine.
     """
     if window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
     slot_step = make_slot_decode_step(cfg, probe_cfg)
+
+    if paged is not None:
+        pstep = _paged_slot_step(slot_step, paged)
+
+        def paged_window_step(params, hybrid, tokens, pos, chunk, rem, table):
+            rem = jnp.asarray(rem, jnp.int32)
+
+            def body(carry, xs):
+                chunk_row, k = xs
+                hybrid, tok, p = carry
+                feed = (k < rem)[:, None, None]
+                inp = jnp.where(feed, chunk_row[:, None, None], tok)
+                logits, hybrid, words = pstep(params, hybrid, inp, p, table)
+                nxt = jnp.argmax(logits[:, 0, 0, :], axis=-1).astype(jnp.int32)
+                return (hybrid, nxt[:, None, None], p + 1), (nxt, words)
+
+            (hybrid, next_tok, _), (toks, words) = jax.lax.scan(
+                body, (hybrid, jnp.asarray(tokens, jnp.int32),
+                       jnp.asarray(pos, jnp.int32)),
+                (jnp.asarray(chunk, jnp.int32),
+                 jnp.arange(window, dtype=jnp.int32)))
+            return toks, words.astype(jnp.uint32), next_tok, hybrid
+
+        return jax.jit(paged_window_step,
+                       donate_argnums=(1,) if donate else ())
 
     def window_step(params, caches, tokens, pos, chunk, rem):
         rem = jnp.asarray(rem, jnp.int32)
@@ -360,7 +443,7 @@ def make_prefill_decode_window(cfg: ModelConfig,
 
 def make_chunked_prefill(cfg: ModelConfig,
                          probe_cfg: ProbeConfig | None = None, *,
-                         chunk: int, donate: bool = False):
+                         chunk: int, donate: bool = False, paged=None):
     """Standalone chunked prefill: advance an *existing* cache by ≤C tokens.
 
     ``chunk_step(params, cache, tokens, n, start_pos)`` for ``tokens`` of
@@ -375,10 +458,45 @@ def make_chunked_prefill(cfg: ModelConfig,
     ``make_cache_prefill`` it takes the cache as an argument — the caller owns
     allocation, which is what lets a serving lane resume a half-built cache
     chunk by chunk.
+
+    With ``paged`` the signature becomes ``chunk_step(params, hybrid, row,
+    slot, tokens, n, start_pos)``: the advanced cache lives in the shared
+    pool, addressed through one slot's ``(max_pages,)`` page-table ``row``
+    (writes to unmapped pages drop; the page probe latches ``PAGE_FAULT``),
+    and dense (non-paged) state is read/written at ``slot`` of the stacked
+    tree. Chaining paged chunks is bit-identical to the contiguous chain for
+    the same reason the contiguous chain matches the one-shot prefill: same
+    decode step, same positions, and the gathered view is bit-equal to the
+    contiguous cache.
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     step_fn = make_decode_step(cfg, probe_cfg)
+
+    if paged is not None:
+
+        def paged_chunk_step(params, hybrid, row, slot, tokens, n, start_pos):
+            tokens = jnp.asarray(tokens, jnp.int32)
+            logits0 = jnp.zeros((tokens.shape[0], 1, cfg.vocab_size),
+                                jnp.float32)
+
+            def body(i, carry):
+                hybrid, word, _ = carry
+                view = paged.gather_slot(hybrid, row, slot)
+                tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+                p = jnp.asarray(start_pos, jnp.int32) + i
+                logits, view, w = step_fn(params, view, tok, p)
+                hybrid = paged.scatter_slot(hybrid, view, row, slot)
+                w = w | paged.probe(row[None, :], p[None])[0]
+                return (hybrid, word | w, logits.astype(jnp.float32))
+
+            hybrid, word, logits = jax.lax.fori_loop(
+                0, jnp.asarray(n, jnp.int32), body,
+                (hybrid, jnp.uint32(0), logits0))
+            return logits, hybrid, word
+
+        return jax.jit(paged_chunk_step,
+                       donate_argnums=(1,) if donate else ())
 
     def chunk_step(params, cache, tokens, n, start_pos):
         tokens = jnp.asarray(tokens, jnp.int32)
@@ -400,7 +518,8 @@ def make_chunked_prefill(cfg: ModelConfig,
 
 
 def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
-                       *, fused: bool = False):
+                       *, fused: bool = False, paged=None,
+                       donate: bool = False):
     """Cache-producing prefill built by reusing the decode step.
 
     Returns ``prefill(params, tokens, max_len, start_pos=0)`` for ``tokens``
@@ -423,9 +542,49 @@ def make_cache_prefill(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
       is the same decode step, so the result is bit-identical to the loop.
       This is the serving window engine's admission/LFLR path: one dispatch
       per prefill instead of S.
+
+    With ``paged`` the signature becomes ``prefill(params, hybrid, row, slot,
+    tokens, start_pos=0)`` (``fused`` implied): the rebuilt cache is written
+    straight into the slot's pool pages through its page-table ``row``, after
+    an in-program scrub of those pages and a fresh reset of the slot's dense
+    state — the whole blocking re-prefill is one dispatch and never leaves
+    stale (possibly poisoned) bytes behind in a recycled page.
     """
     model = build_model(cfg)
     step_fn = make_decode_step(cfg, probe_cfg)
+
+    if paged is not None:
+        # donate: the hybrid argument is the FULL multi-slot pool — an
+        # out-of-place update here would transiently double the very HBM the
+        # paged layout exists to save (the caller must rebind its pool to the
+        # returned tree before any retry)
+        chunked = make_chunked_prefill(cfg, probe_cfg, chunk=paged.max_len,
+                                       paged=paged, donate=donate)
+
+        @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+        def fresh_slot(hybrid, row, slot):
+            hybrid = paged.scrub(hybrid, row)
+            return paged.reset_slot(hybrid, model.init_cache(1, paged.max_len),
+                                    slot)
+
+        def prefill(params, hybrid, row, slot, tokens, start_pos: int = 0):
+            tokens = jnp.asarray(tokens, jnp.int32)
+            if tokens.ndim != 2 or tokens.shape[1] == 0:
+                raise ValueError(f"tokens must be (B, S>0), got {tokens.shape}")
+            _, S = tokens.shape
+            if S > paged.max_len:
+                raise ValueError(
+                    f"prompt of {S} tokens exceeds capacity {paged.max_len}")
+            hybrid = fresh_slot(hybrid, jnp.asarray(row, jnp.int32),
+                                jnp.int32(slot))
+            padded = jnp.pad(tokens, ((0, 0), (0, paged.max_len - S)))
+            logits, hybrid, word = chunked(
+                params, hybrid, jnp.asarray(row, jnp.int32), jnp.int32(slot),
+                padded, jnp.int32(S), jnp.int32(start_pos))
+            return logits, hybrid, word
+
+        return prefill
+
     if not fused:
         step = jax.jit(step_fn)
 

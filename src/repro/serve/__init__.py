@@ -34,4 +34,10 @@ from .queue import (  # noqa: F401
     Response,
 )
 from .replica import Replica  # noqa: F401
-from .scheduler import ChunkPlan, ContinuousBatchingScheduler, Slot  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ChunkPlan,
+    ContinuousBatchingScheduler,
+    PageAllocator,
+    PagePoolExhausted,
+    Slot,
+)

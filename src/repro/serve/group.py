@@ -147,9 +147,15 @@ class ServeGroup:
                  max_request_retries: int = 2, eos_id: Optional[int] = None,
                  timeout: float = 30.0, window: int = 0, donate: bool = True,
                  overlap: bool = True,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 paged: bool = False, page_size: int = 8,
+                 page_budget: Optional[int] = None,
+                 page_watermark: int = 0):
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
+        if paged and not window:
+            # fail here, not as N concurrent thread deaths inside serve()
+            raise ValueError("paged=True requires window mode (window=K)")
         self.cfg = cfg
         self.nranks = nranks
         self.num_slots = num_slots
@@ -160,19 +166,39 @@ class ServeGroup:
         self.window = int(window)
         self.overlap = bool(self.window) and bool(overlap)
         self.prefill_budget = prefill_budget
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self.page_budget = page_budget
+        self.page_watermark = page_watermark
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
+        # — each paged replica owns its own pool + table, but the layout (and
+        # therefore every jitted program) is identical across the fleet
+        if self.paged:
+            from ..launch.paging import PagedLayout
+            model = build_model(cfg)
+            num_pages = (int(page_budget) if page_budget is not None
+                         else num_slots * (max_len // page_size))
+            self._layout = PagedLayout(model.init_cache(1, max_len), max_len,
+                                       page_size=page_size,
+                                       num_pages=num_pages)
+        else:
+            self._layout = None
         self._decode_fn = jax.jit(make_slot_decode_step(cfg, probe_cfg))
         self._prefill_fn = make_cache_prefill(cfg, probe_cfg,
-                                              fused=bool(self.window))
+                                              fused=bool(self.window),
+                                              paged=self._layout,
+                                              donate=bool(self.paged and donate))
         if not self.window:
             self._window_fn = None
         elif self.overlap:
             self._window_fn = make_prefill_decode_window(
-                cfg, probe_cfg, window=self.window, donate=donate)
+                cfg, probe_cfg, window=self.window, donate=donate,
+                paged=self._layout)
         else:
             self._window_fn = make_decode_window(
-                cfg, probe_cfg, window=self.window, donate=donate)
+                cfg, probe_cfg, window=self.window, donate=donate,
+                paged=self._layout)
 
     def serve(self, requests: Sequence[Request], *,
               faults: FaultSchedule | None = None,
@@ -187,11 +213,17 @@ class ServeGroup:
         faults = faults or FaultSchedule()
         ledger = _Ledger(requests, list(range(self.nranks)))
 
+        # a request that could never fit a replica's page pool must be
+        # REJECTED at submit (same clamp Replica applies to its own queue)
+        pool_cap = (self._layout.capacity_tokens
+                    if self.paged and self._layout.has_paged_leaves
+                    else self.max_len)
+
         def rank_fn(ctx):
             inst = initialize(ctx, default_timeout=self.timeout)
             comm = inst.comm_world()
             queue = RequestQueue(AdmissionPolicy(
-                max_queue=10_000, max_total_len=self.max_len))
+                max_queue=10_000, max_total_len=pool_cap))
             replica = Replica(
                 self.cfg, params=self.params, num_slots=self.num_slots,
                 max_len=self.max_len, queue=queue, rank=ctx.rank,
@@ -199,7 +231,11 @@ class ServeGroup:
                 eos_id=self.eos_id,
                 decode_fn=self._decode_fn, prefill_fn=self._prefill_fn,
                 window=self.window, window_fn=self._window_fn,
-                overlap=self.overlap, prefill_budget=self.prefill_budget)
+                overlap=self.overlap, prefill_budget=self.prefill_budget,
+                paged=self.paged, page_size=self.page_size,
+                page_budget=self.page_budget,
+                page_watermark=self.page_watermark,
+                paged_layout=self._layout)
             report = RankReport(rank=ctx.rank, metrics=replica.metrics)
             for round_i in range(max_rounds):
                 for spec in faults.at(round_i, ctx.rank):

@@ -47,6 +47,13 @@ class ServeMetrics:
         self.host_stall_s = 0.0              # that froze the dispatch loop)
         self.window_waits = 0                # windows not yet done at retire
                                              # (device-bound, host keeping up)
+        self.pages_allocated = 0             # paged KV: pool pages granted
+        self.pages_freed = 0                 # paged KV: pool pages reclaimed
+        self.page_evictions = 0              # paged KV: lanes preempted +
+                                             # requeued under memory pressure
+        self.peak_pages_in_use = 0           # paged KV: high-water pool usage
+        self.peak_active_slots = 0           # most lanes concurrently serving
+                                             # (the paged capacity headline)
 
     # ------------------------------------------------------------- recording
     def record_step(self, committed_tokens: int) -> None:
@@ -90,6 +97,24 @@ class ServeMetrics:
         """A window that was still computing when the host came to retire it."""
         with self._lock:
             self.window_waits += 1
+
+    def record_pages(self, *, allocated: int = 0, freed: int = 0,
+                     in_use: int = 0) -> None:
+        """Paged-KV ledger movement (allocation / reclamation + high-water)."""
+        with self._lock:
+            self.pages_allocated += allocated
+            self.pages_freed += freed
+            self.peak_pages_in_use = max(self.peak_pages_in_use, in_use)
+
+    def record_page_eviction(self) -> None:
+        """A lane preempted (and requeued) to free pages under pressure."""
+        with self._lock:
+            self.page_evictions += 1
+
+    def record_active_slots(self, n: int) -> None:
+        """Concurrent-lane gauge; the peak is the paged capacity headline."""
+        with self._lock:
+            self.peak_active_slots = max(self.peak_active_slots, n)
 
     def _tick(self) -> None:
         now = self.clock()
@@ -164,6 +189,11 @@ class ServeMetrics:
             "host_stalls": self.host_stalls,
             "host_stall_s": self.host_stall_s,
             "window_waits": self.window_waits,
+            "pages_allocated": self.pages_allocated,
+            "pages_freed": self.pages_freed,
+            "page_evictions": self.page_evictions,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "peak_active_slots": self.peak_active_slots,
             "tokens_per_s": self.tokens_per_s(),
             "faults": self.fault_counts(),
             "retries": sum(r.retries for r in self.responses),

@@ -102,6 +102,7 @@ class RequestQueue:
         self._lock = threading.Lock()
         self._heap: list[tuple[float, int, Request]] = []
         self._seq = itertools.count()
+        self._rseq = itertools.count(-1, -1)   # requeue: ahead of same-deadline
         self._expired: list[Request] = []
 
     def __len__(self) -> int:
@@ -122,6 +123,23 @@ class RequestQueue:
             key = req.deadline if req.deadline is not None else float("inf")
             heapq.heappush(self._heap, (key, next(self._seq), req))
             return None
+
+    def requeue(self, req: Request) -> None:
+        """Put an *already accepted* request back in the queue, ahead of its
+        deadline class (negative sequence keys sort before every submitted
+        entry with the same deadline, newest requeue first).
+
+        This is the zero-drop re-queue path: admission checks are bypassed —
+        the request was admitted once and must eventually get a terminal
+        answer — and ``arrival_t`` is preserved, so latency/TTFT span the
+        preemption (same contract as the group ledger's re-route). Used when
+        a serving slot is preempted, e.g. paged-KV eviction under memory
+        pressure.
+        """
+        assert req.arrival_t is not None, "requeue is for accepted requests"
+        with self._lock:
+            key = req.deadline if req.deadline is not None else float("inf")
+            heapq.heappush(self._heap, (key, next(self._rseq), req))
 
     def submit_all(self, reqs: Iterable[Request]) -> list[Response]:
         """Submit many; returns the rejections (accepted ones return later)."""

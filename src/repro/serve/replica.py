@@ -57,8 +57,9 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.detect import ProbeConfig
 from ..core.device_channel import WORD_DTYPE, DeviceFuture
-from ..core.errors import PropagatedError
+from ..core.errors import ErrorCode, PropagatedError
 from ..core.recovery import Action, RecoveryPolicy
+from ..launch.paging import PagedLayout
 from ..launch.steps import (
     make_cache_prefill,
     make_decode_window,
@@ -68,7 +69,7 @@ from ..launch.steps import (
 from ..models import build_model
 from .metrics import ServeMetrics
 from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
-from .scheduler import ContinuousBatchingScheduler
+from .scheduler import ContinuousBatchingScheduler, PageAllocator, PagePoolExhausted
 
 # CPU/interpret backends fall back to the fused-by-XLA probe oracle anyway;
 # forcing it keeps the vmapped step portable (see kernels/fault_probe/ops.py).
@@ -158,7 +159,10 @@ class Replica:
                  window: int = 0, donate: bool = True,
                  window_fn: Callable | None = None,
                  overlap: bool = True,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 paged: bool = False, page_size: int = 8,
+                 page_budget: Optional[int] = None, page_watermark: int = 0,
+                 paged_layout: Optional[PagedLayout] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -169,12 +173,37 @@ class Replica:
         self.policy = policy or RecoveryPolicy()
         self.metrics = metrics or ServeMetrics(clock=clock)
         self.max_request_retries = max_request_retries
+        self.window = int(window)
+        self.overlap = bool(self.window) and bool(overlap)
+        # ---- paged KV/state pool (paged=True, window mode only) -----------
+        # full-attention caches become one shared page pool addressed through
+        # a (slots, max_pages) table; the allocator owns the free list and
+        # the per-slot ownership ledger (DESIGN.md §3.3)
+        self.paged = bool(paged)
+        one = self.model.init_cache(1, max_len)
+        if self.paged:
+            if not self.window:
+                raise ValueError("paged=True requires window mode (window=K)")
+            num_pages = (int(page_budget) if page_budget is not None
+                         else num_slots * (max_len // page_size))
+            self.layout = paged_layout or PagedLayout(
+                one, max_len, page_size=page_size, num_pages=num_pages)
+            self.alloc = PageAllocator(self.layout.num_pages,
+                                       self.layout.page_size,
+                                       watermark=page_watermark)
+            self.page_table = self.layout.empty_table(num_slots)
+            self._scrub = jax.jit(self.layout.scrub, donate_argnums=(0,))
+        else:
+            self.layout = None
+            self.alloc = None
         # jitted step functions are shareable across replicas (ServeGroup
         # builds them once so N rank threads compile once, not N times)
         self._decode = decode_fn or jax.jit(
             make_slot_decode_step(cfg, probe_cfg))
-        self._prefill = prefill_fn or make_cache_prefill(cfg, probe_cfg,
-                                                         fused=bool(window))
+        self._prefill = prefill_fn or make_cache_prefill(
+            cfg, probe_cfg, fused=bool(window),
+            paged=self.layout if self.paged else None,
+            donate=bool(self.paged and donate))
         self._enum = make_enum_fn(num_slots)
         # fused one-dispatch insertion of a rebuilt per-sequence cache into the
         # slot-stacked caches (the un-jitted tree_map was one dispatch per
@@ -184,45 +213,187 @@ class Replica:
                 jax.tree_util.tree_map(
                     lambda f, o: f.at[slot].set(o.astype(f.dtype)), full, one),
                 dev_toks.at[slot, 0, 0].set(tok)))
+        self._set_tok = jax.jit(
+            lambda dev_toks, slot, tok: dev_toks.at[slot, 0, 0].set(tok))
+        if self.paged and self.layout.has_paged_leaves:
+            # a request that could never fit in the pool must be REJECTED at
+            # submit, not deferred forever by the watermark gate
+            pool_cap = min(max_len,
+                           self.layout.num_pages * self.layout.page_size)
+        else:
+            pool_cap = max_len
         self.queue = queue or RequestQueue(
-            AdmissionPolicy(max_total_len=max_len), clock=clock)
+            AdmissionPolicy(max_total_len=pool_cap), clock=clock)
         self.sched = ContinuousBatchingScheduler(
             num_slots, self.queue, replica=rank, eos_id=eos_id, clock=clock,
-            prefill_budget=prefill_budget)
-        # stacked per-sequence (batch=1) caches, leading slot axis
-        one = self.model.init_cache(1, max_len)
-        self.caches = jax.tree_util.tree_map(
-            lambda v: jnp.broadcast_to(v[None], (num_slots, *v.shape)).copy(),
-            one)
+            prefill_budget=prefill_budget,
+            can_admit=(self._can_admit if self.paged else None),
+            on_release=(self._release_pages if self.paged else None))
+        # stacked per-sequence (batch=1) caches, leading slot axis — or, when
+        # paged, the hybrid tree (page pools + dense per-slot stacks)
+        if self.paged:
+            self.caches = self.layout.init_hybrid(one, num_slots)
+        else:
+            self.caches = jax.tree_util.tree_map(
+                lambda v: jnp.broadcast_to(v[None],
+                                           (num_slots, *v.shape)).copy(),
+                one)
         self._slot_logits = jnp.zeros((num_slots, 1, 1, cfg.vocab_size),
                                       jnp.float32)
         self._step_count = 0
         # ---- zero-sync decode windows (window=K > 0) ----------------------
-        self.window = int(window)
-        self.overlap = bool(self.window) and bool(overlap)
         if self.window:
             self._decode_window = window_fn or (
-                make_prefill_decode_window(cfg, probe_cfg, window=self.window,
-                                           donate=donate)
+                make_prefill_decode_window(
+                    cfg, probe_cfg, window=self.window, donate=donate,
+                    paged=self.layout if self.paged else None)
                 if self.overlap else
-                make_decode_window(cfg, probe_cfg, window=self.window,
-                                   donate=donate))
+                make_decode_window(
+                    cfg, probe_cfg, window=self.window, donate=donate,
+                    paged=self.layout if self.paged else None))
             self._wenum = make_window_enum_fn(num_slots)
-        if self.overlap:
+        if self.overlap or self.paged:
             # fresh per-sequence cache template + fused one-dispatch reset of
             # one lane's slice of the stacked caches — the overlapped
-            # admission/LFLR restart point (async, never a host sync)
+            # admission/LFLR restart point (async, never a host sync). In
+            # paged mode the reset covers the dense leaves only; the paged
+            # half of the restart is the page scrub at re-allocation.
             self._fresh = one
-            self._reset = jax.jit(
-                lambda full, fresh, slot: jax.tree_util.tree_map(
-                    lambda f, o: f.at[slot].set(o.astype(f.dtype)),
-                    full, fresh),
-                donate_argnums=(0,))    # in-place slice update, no cache copy
+            reset = (self.layout.reset_slot if self.paged else
+                     lambda full, fresh, slot: jax.tree_util.tree_map(
+                         lambda f, o: f.at[slot].set(o.astype(f.dtype)),
+                         full, fresh))
+            self._reset = jax.jit(reset, donate_argnums=(0,))
         self._pending: Optional[_WindowInFlight] = None
         # device-resident feed for the next window (token chain never leaves
         # the device) + host-tracked dispatch positions
         self._dev_tokens = jnp.zeros((num_slots, 1, 1), jnp.int32)
         self._dev_pos = np.zeros((num_slots,), np.int32)
+
+    # ------------------------------------------------------------- page ledger
+    def _can_admit(self, req: Request) -> bool:
+        """Watermark admission: a fresh sequence joins only if its prompt's
+        pages (plus the first generated position) fit with the configured
+        headroom left free for in-flight lanes to grow into."""
+        if not self.layout.has_paged_leaves:
+            return True
+        return self.alloc.can_admit(len(req.prompt) + 1)
+
+    def _release_pages(self, slot: int) -> None:
+        """Free a slot's pages and unmap its table row. Host bookkeeping only
+        — the device chain still orders every dispatched read of these pages
+        before the scrub that their next owner's allocation queues, so
+        reclamation never stalls or races the in-flight window."""
+        if self.alloc.owns(slot):
+            freed = self.alloc.free_slot(slot)
+            self.page_table[slot, :] = self.layout.sentinel
+            self.metrics.record_pages(freed=len(freed),
+                                      in_use=self.alloc.pages_in_use)
+
+    def _oldest_active(self, exclude: frozenset[int]) -> Optional[int]:
+        """Eviction victim: the oldest-arrival active lane that owns pages."""
+        best = None
+        for s in self.sched.slots:
+            if not s.active or s.idx in exclude or not self.alloc.owns(s.idx):
+                continue
+            key = (s.req.arrival_t if s.req.arrival_t is not None
+                   else float("inf"), s.idx)
+            if best is None or key < best[0]:
+                best = (key, s.idx)
+        return None if best is None else best[1]
+
+    def _evict_for_pages(self, victim: int) -> None:
+        """Memory-pressure preemption: pull the victim's request out of its
+        slot and put it back in the queue (progress discarded — it recomputes
+        from the prompt on its next slot, exactly the ledger re-route
+        contract: zero dropped requests). The in-flight speculative window's
+        lane is invalidated so its stale block is skipped at retirement."""
+        req = self.sched.preempt(victim)          # on_release frees the pages
+        self.queue.requeue(req)
+        self.metrics.record_page_eviction()
+        if self._pending is not None:
+            self._pending.valid[victim] = False
+
+    def _grow_slot(self, slot: int, target_tokens: int, *,
+                   exclude_self: bool = False) -> Optional[list[int]]:
+        """Ensure ``slot`` owns pages covering ``target_tokens`` positions,
+        evicting oldest lanes under pressure. Returns the newly allocated
+        (unscrubbed) page ids, or None if ``slot`` itself was evicted.
+
+        The target is clamped to the pool's token capacity, not just
+        ``max_len``: window over-decode can push ``pos + K`` past what any
+        lane may hold, and demanding pages that cannot exist would evict the
+        whole fleet and livelock (positions past the clamp drop their writes
+        and are discarded at retirement anyway)."""
+        target = min(int(target_tokens), self.layout.capacity_tokens)
+        while True:
+            need = (self.alloc.pages_for(target)
+                    - len(self.alloc.owned(slot)))
+            if need <= 0:
+                return []
+            try:
+                got = self.alloc.alloc(slot, need)
+                break
+            except PagePoolExhausted:
+                victim = self._oldest_active(
+                    frozenset((slot,)) if exclude_self else frozenset())
+                if victim is None:
+                    raise      # unreachable under the admission-policy clamp
+                self._evict_for_pages(victim)
+                if victim == slot:
+                    return None
+        # append-only: write just the new tail entries, never rewrite the
+        # whole row — the device table is the mapping of record, and a silent
+        # full-row rewrite would paper over exactly the ledger/table
+        # divergence the in-band PAGE_FAULT probe exists to surface
+        n_owned = len(self.alloc.owned(slot))
+        self.page_table[slot, n_owned - len(got):n_owned] = got
+        self.metrics.record_pages(allocated=len(got),
+                                  in_use=self.alloc.pages_in_use)
+        return got
+
+    def _paged_prepare(self, plan: dict) -> None:
+        """Pre-dispatch page maintenance for one window.
+
+        1. **Lane (re)starts** (fresh chunk plans — admission or LFLR): free
+           the lane's old pages (the LFLR page *reclaim*, a pure host ledger
+           op) and reset its dense state on the device chain; its new pages
+           are (re-)acquired in step 2 — this is the non-blocking
+           free-and-reacquire lane of DESIGN.md §3.3.
+        2. **Growth**: every lane that writes during this window must have
+           the pages holding positions ``[pos, pos+K)`` mapped; exhaustion
+           preempts oldest lanes into the queue (never a drop).
+        3. **Scrub**: newly allocated pages are zeroed in one fused dispatch
+           riding the device chain before the window, so recycled pages can
+           never leak a previous owner's (possibly poisoned) state.
+        """
+        sched, K = self.sched, self.window
+        for slot, cp in plan.items():
+            if cp.rem == 0 or not cp.fresh:
+                continue
+            self._release_pages(slot)
+            self.caches = self._reset(self.caches, self._fresh,
+                                      jnp.int32(slot))
+            self._dev_pos[slot] = 0
+        if not self.layout.has_paged_leaves:
+            return
+        deferred = {slot for slot, cp in plan.items() if cp.rem == 0}
+        new_ids: list[int] = []
+        for s in list(sched.slots):
+            if not s.active or s.idx in deferred:
+                continue
+            got = self._grow_slot(s.idx, int(self._dev_pos[s.idx]) + K)
+            if got:
+                new_ids.extend(got)
+        if new_ids:
+            # dedupe: an eviction inside the growth loop recycles ids, so the
+            # same physical page can be granted twice within one prepare —
+            # unique ids always fit the fixed-size staging buffer
+            new_ids = list(dict.fromkeys(new_ids))
+            ids = np.full((self.layout.num_pages,), self.layout.sentinel,
+                          np.int32)
+            ids[:len(new_ids)] = new_ids
+            self.caches = self._scrub(self.caches, jnp.asarray(ids))
 
     # ---------------------------------------------------------------- warmup
     def warmup(self, *, max_new: int = 8) -> None:
@@ -249,8 +420,11 @@ class Replica:
     # ---------------------------------------------------------- fault surface
     def inject_state_fault(self, slot: Optional[int] = None) -> Optional[int]:
         """Simulated SDC (paper §II-A): NaN one element of a slot's recurrent
-        state on device. ``slot=None`` picks the first active slot. Returns the
-        poisoned slot, or None if there was nothing to poison."""
+        state on device — or, for attention-only architectures, of the K
+        entry at position 0 of the slot's (paged or contiguous) KV cache,
+        which the non-finite-logits probe then latches. ``slot=None`` picks
+        the first active slot. Returns the poisoned slot, or None if there
+        was nothing to poison (e.g. a paged lane holding no mapped page)."""
         if slot is None:
             active = self.sched.active_slots()
             if not active:
@@ -266,10 +440,40 @@ class Replica:
             return leaf
 
         poisoned = jax.tree_util.tree_map_with_path(poison, self.caches)
+        if hit:
+            self.caches = poisoned
+            return slot
+        # attention-only arch: poison K at position 0 (always a written
+        # position once the lane holds state, so the NaN reaches the scores)
+        if self.paged and self.layout.has_paged_leaves:
+            pid = int(self.page_table[slot, 0])
+            if pid >= self.layout.num_pages:
+                return None              # lane owns no page yet — nothing real
+
+            def poison_pool(path, leaf):
+                if hit or not self.layout.is_paged_path(path):
+                    return leaf
+                hit.append(True)
+                return leaf.at[(pid,) + (0,) * (leaf.ndim - 1)].set(jnp.nan)
+
+            poisoned = jax.tree_util.tree_map_with_path(poison_pool,
+                                                        self.caches)
+        else:
+
+            def poison_kv(path, leaf):
+                keys = [getattr(k, "key", None) for k in path]
+                if (hit or not keys or keys[-1] != "k" or leaf.ndim < 4
+                        or leaf.shape[leaf.ndim - 3] != self.max_len):
+                    return leaf          # full-attention K leaves only
+                hit.append(True)
+                return leaf.at[(slot,) + (0,) * (leaf.ndim - 1)].set(jnp.nan)
+
+            poisoned = jax.tree_util.tree_map_with_path(poison_kv,
+                                                        self.caches)
         if not hit:
             raise ValueError(
-                f"{self.cfg.name}: no recurrent state to poison "
-                "(attention-only arch — flip a KV bit instead)")
+                f"{self.cfg.name}: no recurrent state or full-attention KV "
+                "to poison")
         self.caches = poisoned
         return slot
 
@@ -294,6 +498,7 @@ class Replica:
                 resp = self._prefill_slot(slot)
                 if resp is not None:
                     out.append(resp)
+        self.metrics.record_active_slots(self.sched.in_flight())
         if self.window:
             if self.sched.has_active() or self._pending is not None:
                 out.extend(self._window_cycle())
@@ -372,20 +577,31 @@ class Replica:
         self._step_count += 1
         sched = self.sched
         K = self.window
+        plan = sched.plan_prefill(K) if self.overlap else {}
+        if self.paged:
+            # page maintenance first: lane restarts recycle their pages, every
+            # writing lane gets growth pages, eviction preempts under pressure
+            # — all of it host bookkeeping + chained device ops, zero syncs
+            self._paged_prepare(plan)
         mask = sched.active_mask()
         start = np.zeros(sched.num_slots, np.int64)
+        extra = ((jnp.asarray(self.page_table),) if self.paged else ())
         if self.overlap:
             chunk = np.zeros((K, sched.num_slots), np.int32)
             rem = np.zeros((sched.num_slots,), np.int32)
-            for slot, cp in sched.plan_prefill(K).items():
+            for slot, cp in plan.items():
+                if not sched.slots[slot].active:
+                    continue            # preempted by the page-pressure loop
                 if cp.rem == 0:
                     # deferred fresh lane: no valid state yet — fully masked
                     mask[slot] = 0
                     start[slot] = K
                     continue
-                if cp.fresh:
+                if cp.fresh and not self.paged:
                     # lane (re)start: fresh cache slice + position 0, both
-                    # queued on the device chain — never a host sync
+                    # queued on the device chain — never a host sync (the
+                    # paged engine did this in _paged_prepare, plus the page
+                    # free/re-acquire/scrub that replaces the slab reset)
                     self.caches = self._reset(self.caches, self._fresh,
                                               jnp.int32(slot))
                     self._dev_pos[slot] = 0
@@ -396,11 +612,11 @@ class Replica:
             toks, words, next_tok, caches = self._decode_window(
                 self.params, self.caches, self._dev_tokens,
                 jnp.asarray(self._dev_pos), jnp.asarray(chunk),
-                jnp.asarray(rem))
+                jnp.asarray(rem), *extra)
         else:
             toks, words, next_tok, caches = self._decode_window(
                 self.params, self.caches, self._dev_tokens,
-                jnp.asarray(self._dev_pos))
+                jnp.asarray(self._dev_pos), *extra)
         # the device-side chain advances: window N+1 consumes these directly
         self.caches = caches
         self._dev_tokens = next_tok
@@ -477,6 +693,21 @@ class Replica:
         decision = self.policy.decide(exc, self._step_count)
         self.metrics.record_fault(self._step_count, int(exc.combined_code),
                                   decision.action.value, tuple(faulted))
+        if self.paged:
+            # page-ownership faults get their own ledger record: the LFLR
+            # re-queue repairs them too (free + re-acquire rebuilds the
+            # mapping), but a PAGE_FAULT means the host ledger and device
+            # table diverged — worth counting separately from soft faults.
+            # fault_codes() reads the history, so attribution survives even
+            # an enumeration-table-saturating burst.
+            codes = win.fut.fault_codes()
+            page_slots = tuple(
+                s for s in faulted if codes is not None
+                and int(codes[s]) & int(ErrorCode.PAGE_FAULT))
+            if page_slots:
+                self.metrics.record_fault(self._step_count,
+                                          int(ErrorCode.PAGE_FAULT),
+                                          "page_reclaim", page_slots)
         steps = win.fut.fault_steps()        # first faulting step per slot
         limits = np.full(num_slots, K, np.int64)
         for slot in faulted:
@@ -585,15 +816,37 @@ class Replica:
         double-buffered pipeline: the rebuilt cache / next-token / position
         overwrite the lane's device state (the in-flight speculative window's
         outputs), and the lane is marked invalid in that window so its stale
-        block is skipped at retirement."""
+        block is skipped at retirement.
+
+        In paged mode the rebuilt cache is written straight into the slot's
+        (re-acquired, in-program-scrubbed) pool pages — there is no cache to
+        insert afterwards, only the device token feed to update."""
         t0 = self.clock()
         try:
             while True:
                 tokens = np.asarray([self.sched.sequence_tokens(slot)],
                                     np.int32)
-                logits, cache, word = self._prefill(self.params, tokens,
-                                                    self.max_len)
-                fut = DeviceFuture(outputs=(logits, cache), word=word)
+                if self.paged:
+                    # recycle + reacquire the lane's pages for the full
+                    # sequence plus its first generated write position
+                    self._release_pages(slot)
+                    if self._grow_slot(slot, tokens.shape[1] + 1,
+                                       exclude_self=True) is None:
+                        raise AssertionError("blocking prefill self-evicted")
+                    logits, hybrid, word = self._prefill(
+                        self.params, self.caches,
+                        jnp.asarray(self.page_table[slot]), jnp.int32(slot),
+                        tokens)
+                    # rebind NOW: the pool was donated to the dispatch, and a
+                    # faulted attempt's stray writes are confined to this
+                    # slot's row (drop-mode) and scrubbed by the retry's
+                    # in-program fresh_slot
+                    self.caches = hybrid
+                    fut = DeviceFuture(outputs=(logits, hybrid), word=word)
+                else:
+                    logits, cache, word = self._prefill(self.params, tokens,
+                                                        self.max_len)
+                    fut = DeviceFuture(outputs=(logits, cache), word=word)
                 try:
                     logits, cache = fut.wait()
                     break
@@ -607,9 +860,17 @@ class Replica:
                             slot, FAILED,
                             detail=f"prefill faulted {retries} times: {exc}")
             tok = int(jax.device_get(jnp.argmax(logits[0, -1])))
-            self.caches, self._dev_tokens = self._insert(
-                self.caches, cache, jnp.int32(slot), self._dev_tokens,
-                jnp.int32(tok))
+            if self.paged:
+                # `cache` is the updated hybrid tree: pool writes landed
+                # through the page table, dense leaves at the slot slice
+                self.caches = cache
+                self._dev_tokens = self._set_tok(self._dev_tokens,
+                                                 jnp.int32(slot),
+                                                 jnp.int32(tok))
+            else:
+                self.caches, self._dev_tokens = self._insert(
+                    self.caches, cache, jnp.int32(slot), self._dev_tokens,
+                    jnp.int32(tok))
             if not self.window:
                 # only the stepwise commit path reads logits back per slot
                 self._slot_logits = self._slot_logits.at[slot].set(

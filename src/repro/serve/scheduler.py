@@ -7,6 +7,13 @@ per slot, evicts finished/expired/faulted sequences and backfills freed slots
 from the admission queue *every step* — prefill and decode share the same
 fixed-shape batch, so a long request never blocks the lane (the serving
 counterpart of the paper's "local errors must not block global progress").
+
+:class:`PageAllocator` is the host half of the paged KV pool
+(``launch/paging.py`` holds the device half): a free list plus a per-slot
+ownership ledger. It is deliberately dumb — pure accounting, no JAX — so its
+invariants (no page owned twice, double frees rejected, exact free-count
+arithmetic under arbitrary alloc/free interleavings) are unit-testable
+without a device in sight.
 """
 from __future__ import annotations
 
@@ -17,6 +24,118 @@ from typing import Callable, Optional
 import numpy as np
 
 from .queue import EXPIRED, OK, Request, RequestQueue, Response
+
+
+class PagePoolExhausted(RuntimeError):
+    """Not enough free pages — the caller must evict or defer (never drop)."""
+
+
+class PageAllocator:
+    """Free list + per-slot page-ownership ledger for the paged KV pool.
+
+    * **allocation order is irrelevant by design** — the device addresses
+      pages through the table, so fragmentation of the physical id space
+      never degrades anything (there is no "contiguity" to lose);
+    * **watermark-driven admission**: :meth:`can_admit` says whether a new
+      sequence's first pages fit while keeping ``watermark`` pages free as
+      headroom for in-flight lanes to grow into (one page per active lane is
+      a sensible default at call sites);
+    * **strict frees**: freeing a slot that owns nothing, or a page that is
+      not owned by that slot, raises — a double free means the host ledger
+      and the device table have diverged, which is exactly the corruption
+      the in-band ``PAGE_FAULT`` probe exists to catch, so it must never be
+      papered over.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *, watermark: int = 0):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if watermark < 0:
+            raise ValueError(f"watermark must be >= 0, got {watermark}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.watermark = int(watermark)
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._owned: dict[int, list[int]] = {}
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.page_size)
+
+    def owns(self, slot: int) -> bool:
+        return bool(self._owned.get(slot))
+
+    def owned(self, slot: int) -> tuple[int, ...]:
+        """Slot's pages in logical-page order (index i holds positions
+        ``[i*page_size, (i+1)*page_size)``)."""
+        return tuple(self._owned.get(slot, ()))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """True iff ``n_tokens`` worth of pages fit with the watermark spare.
+
+        The headroom is waived for a request so large that ``need +
+        watermark`` exceeds the whole pool: such a request could *never*
+        pass the gated check even with every page free, and an accepted
+        request must eventually be admitted, not deferred forever — it is
+        admitted whenever it plainly fits instead."""
+        need = self.pages_for(n_tokens)
+        headroom = (self.watermark
+                    if need + self.watermark <= self.num_pages else 0)
+        return need <= self.free_pages - headroom
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, slot: int, n: int) -> list[int]:
+        """Grow ``slot`` by ``n`` pages; returns the new physical ids (the
+        caller appends them to the device table *and scrubs them* before any
+        step reads them). Raises :class:`PagePoolExhausted` without partial
+        effect when the pool cannot cover the request."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"slot {slot} needs {n} pages, {len(self._free)} free "
+                f"of {self.num_pages}")
+        got = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(slot, []).extend(got)
+        return got
+
+    def free_slot(self, slot: int) -> list[int]:
+        """Return all of ``slot``'s pages to the free list; returns the freed
+        ids. Freeing a slot that owns nothing is a double free — rejected."""
+        pages = self._owned.pop(slot, None)
+        if not pages:
+            raise ValueError(f"double free: slot {slot} owns no pages")
+        # cross-ownership corruption is asserted by check() (tests/debug);
+        # scanning every owner here would put an O(pages²) walk on the hot
+        # finish/evict path
+        self._free.extend(pages)
+        return pages
+
+    # -------------------------------------------------------------- invariant
+    def check(self) -> None:
+        """Assert ledger consistency (tests / debugging): every page is free
+        or owned exactly once."""
+        seen: dict[int, str] = {}
+        for p in self._free:
+            assert p not in seen, f"page {p} double-listed as free"
+            seen[p] = "free"
+        for slot, pages in self._owned.items():
+            for p in pages:
+                assert p not in seen, (
+                    f"page {p} owned by slot {slot} and {seen[p]}")
+                seen[p] = f"slot {slot}"
+        assert len(seen) == self.num_pages, (
+            f"{self.num_pages - len(seen)} pages leaked")
 
 
 @dataclass
@@ -96,7 +215,9 @@ class ContinuousBatchingScheduler:
     def __init__(self, num_slots: int, queue: RequestQueue, *,
                  replica: Optional[int] = None, eos_id: Optional[int] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 can_admit: Optional[Callable[[Request], bool]] = None,
+                 on_release: Optional[Callable[[int], None]] = None):
         if num_slots < 1:
             raise ValueError("need at least one slot")
         if prefill_budget is not None and prefill_budget < 1:
@@ -107,6 +228,12 @@ class ContinuousBatchingScheduler:
         self.eos_id = eos_id
         self.clock = clock
         self.prefill_budget = prefill_budget
+        # paged-KV hooks: `can_admit` gates backfill on pool headroom
+        # (watermark admission); `on_release` fires whenever a slot stops
+        # owning its request (finish, expiry, failure, preemption) so the
+        # page ledger can reclaim without the replica chasing every exit path
+        self.can_admit = can_admit
+        self.on_release = on_release
 
     # ---------------------------------------------------------------- queries
     @property
@@ -227,6 +354,11 @@ class ContinuousBatchingScheduler:
             req = self.queue.pop(now)
             if req is None:
                 break
+            if self.can_admit is not None and not self.can_admit(req):
+                # pool headroom exhausted: put it back (ahead of its class)
+                # and stop admitting this cycle — deferred, never dropped
+                self.queue.requeue(req)
+                break
             s.req = req
             s.generated = []
             s.t_first = None
@@ -328,7 +460,27 @@ class ContinuousBatchingScheduler:
             ttft_s=(s.t_first - req.arrival_t) if s.t_first is not None else None,
             retries=req.retries, replica=self.replica, detail=detail)
         s.clear()
+        if self.on_release is not None:
+            self.on_release(s.idx)
         return resp
+
+    def preempt(self, slot: int) -> Request:
+        """Non-terminal eviction: pull the request out of its slot with its
+        progress discarded (the next owner recomputes from the prompt — the
+        single-replica analogue of ``drain_in_flight``, used by the paged
+        engine's memory-pressure path). The caller MUST requeue the returned
+        request: an accepted request is never dropped. Fault retries already
+        consumed are *preserved* (unlike the group ledger's cross-replica
+        re-route, the same replica keeps serving it): a persistently
+        faulting request must still converge to FAILED instead of laundering
+        its retry budget through evictions."""
+        s = self.slots[slot]
+        req = s.req
+        assert req is not None, f"preempt on free slot {slot}"
+        s.clear()
+        if self.on_release is not None:
+            self.on_release(slot)
+        return req
 
     # ------------------------------------------------------------- re-route
     def drain_in_flight(self) -> list[Request]:
@@ -342,4 +494,6 @@ class ContinuousBatchingScheduler:
             if s.active:
                 out.append(s.req)
                 s.clear()
+                if self.on_release is not None:
+                    self.on_release(s.idx)
         return out

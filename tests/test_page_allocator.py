@@ -1,0 +1,103 @@
+"""PageAllocator unit tests: pure host-side ledger arithmetic.
+
+The allocator is deliberately JAX-free, so its invariants — exact free-count
+accounting under interleaved alloc/free (fragmentation), exhaustion without
+partial effect, double-free rejection, watermark admission — are checked
+here without a device in sight. Replica-level behaviour (eviction, LFLR
+reclaim, bit-exactness) lives in ``test_serve_paged.py``.
+"""
+import pytest
+
+from repro.serve import PageAllocator, PagePoolExhausted
+
+
+def test_pages_for_rounds_up():
+    a = PageAllocator(8, 4)
+    assert a.pages_for(0) == 0
+    assert a.pages_for(1) == 1
+    assert a.pages_for(4) == 1
+    assert a.pages_for(5) == 2
+    assert a.pages_for(17) == 5
+
+
+def test_interleaved_alloc_free_fragmentation():
+    """Interleaved alloc/free shreds the physical id space; the ledger must
+    keep exact counts, never hand out an owned page, and still reach full
+    utilisation — fragmentation cannot degrade a table-indirected pool."""
+    a = PageAllocator(16, 4)
+    a.alloc(0, 4)
+    a.alloc(1, 3)
+    a.alloc(2, 5)
+    assert a.free_pages == 4
+    a.free_slot(1)                       # hole in the middle of the id space
+    assert a.free_pages == 7
+    a.alloc(3, 2)
+    a.free_slot(0)                       # second hole
+    a.alloc(4, 6)                        # spans both holes
+    assert a.free_pages == 16 - 5 - 2 - 6
+    a.check()
+    # full utilisation despite the churn
+    a.alloc(5, a.free_pages)
+    assert a.free_pages == 0
+    a.check()
+    # every page owned exactly once
+    owned = [p for s in (2, 3, 4, 5) for p in a.owned(s)]
+    assert len(owned) == len(set(owned)) == 16
+
+
+def test_exhaustion_raises_without_partial_effect():
+    a = PageAllocator(4, 2)
+    a.alloc(0, 3)
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(1, 2)
+    assert a.free_pages == 1             # nothing was consumed by the failure
+    assert not a.owns(1)
+    a.alloc(1, 1)                        # the remaining page still allocs
+    assert a.free_pages == 0
+    a.check()
+
+
+def test_double_free_rejected():
+    a = PageAllocator(8, 4)
+    a.alloc(0, 2)
+    freed = a.free_slot(0)
+    assert len(freed) == 2 and a.free_pages == 8
+    with pytest.raises(ValueError, match="double free"):
+        a.free_slot(0)
+    with pytest.raises(ValueError, match="double free"):
+        a.free_slot(3)                   # never owned anything
+    a.check()
+
+
+def test_owned_preserves_logical_page_order():
+    """owned() must keep allocation (= logical page) order: index i of the
+    table row holds positions [i*page_size, (i+1)*page_size)."""
+    a = PageAllocator(8, 4)
+    first = a.alloc(0, 2)
+    second = a.alloc(0, 3)
+    assert list(a.owned(0)) == first + second
+
+
+def test_watermark_admission():
+    a = PageAllocator(8, 4, watermark=2)
+    assert a.can_admit(16)               # 4 pages <= 8 free - 2 watermark
+    # 7 pages + 2 watermark > 8 total: the gated check could NEVER pass, so
+    # the headroom is waived — an accepted request must not defer forever
+    assert a.can_admit(28)
+    a.alloc(0, 4)
+    assert a.can_admit(8)                # 2 <= 4 - 2
+    assert not a.can_admit(12)           # 3 > 2 (headroom applies: 3+2 <= 8)
+    assert not a.can_admit(28)           # waived headroom, but 7 > 4 free
+    a.free_slot(0)
+    assert a.can_admit(24)               # 6+2 <= 8: gated, 6 <= 8-2
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        PageAllocator(0, 4)
+    with pytest.raises(ValueError):
+        PageAllocator(4, 0)
+    with pytest.raises(ValueError):
+        PageAllocator(4, 4, watermark=-1)
+    with pytest.raises(ValueError):
+        PageAllocator(4, 4).alloc(0, -1)
