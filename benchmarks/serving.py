@@ -43,8 +43,21 @@ NUM_SLOTS = 4
 MAX_LEN = 64
 WINDOW = 8
 FAULT_EVERY = 2     # 1 injected fault per FAULT_EVERY completed requests
-N_TRIALS = 3        # best-of-N per cell: shields the tracked trajectory
-                    # (BENCH_serving.json) from OS scheduling noise
+N_TRIALS = 5        # best-of-N per cell: shields the tracked trajectory
+                    # (BENCH_serving.json) from OS scheduling noise. Trials
+                    # are interleaved round-robin across cells (not run
+                    # consecutively per cell) so a multi-minute slow window
+                    # on a shared box cannot swallow any one cell's whole
+                    # best-of and hand the bench-regression gate a bad draw
+N_TRIALS_FAULTED = 7  # faulted cells swing ~2× on top of that (fault
+                      # timing decides how much recovery work a run pays)
+                      # — they get a deeper best-of. Best-of-N measures
+                      # near-peak capability (the luckiest fault draw), so
+                      # the faulted-vs-steady gap it reports is a lower
+                      # bound on typical recovery cost; that bias is the
+                      # price of a statistic stable enough to gate on, and
+                      # the trial counts ride in record["config"] so runs
+                      # stay comparable-by-construction
 
 ENGINES = (
     ("stepwise", dict(window=0)),
@@ -212,44 +225,57 @@ def bench_all():
                    "n_requests": N_REQUESTS, "prompt_len": PROMPT_LEN,
                    "max_new": MAX_NEW, "num_slots": NUM_SLOTS,
                    "max_len": MAX_LEN, "window": WINDOW,
-                   "fault_every": FAULT_EVERY},
+                   "fault_every": FAULT_EVERY,
+                   "n_trials": N_TRIALS,
+                   "n_trials_faulted": N_TRIALS_FAULTED},
         "engines": {},
     }
-    for engine, engine_kw in ENGINES:
-        record["engines"][engine] = {}
-        for label, fault_every in (("steady", 0), ("faulted", FAULT_EVERY)):
-            s = max((_serve_once(engine_kw, fault_every=fault_every)
-                     for _ in range(N_TRIALS)),
-                    key=lambda r: r["tokens_per_s_timed"])
-            tps = s["tokens_per_s_timed"]
-            us_per_tok = (s["wall_s"] * 1e6 / max(s["timed_tokens"], 1))
-            note = (f"{s['faults_injected']}_faults_recovered" if fault_every
-                    else f"{N_REQUESTS}req_x_{MAX_NEW}tok")
-            rows.append((f"serve_{engine}_{label}_tokens_per_s",
-                         f"{tps:.0f}tok/s {note}", us_per_tok))
-            for metric in ("latency", "ttft"):
-                for p in ("p50", "p99"):
-                    v = s[f"{metric}_{p}_s"]
-                    rows.append((f"serve_{engine}_{label}_{metric}_{p}",
-                                 f"{v * 1e3:.1f}ms", v * 1e6))
-            record["engines"][engine][label] = {
-                "tokens_per_s": tps,
-                "latency_p50_s": s["latency_p50_s"],
-                "latency_p99_s": s["latency_p99_s"],
-                "ttft_p50_s": s["ttft_p50_s"],
-                "ttft_p99_s": s["ttft_p99_s"],
-                "wall_s": s["wall_s"],
-                "timed_tokens": s["timed_tokens"],
-                "faults_injected": s["faults_injected"],
-                "windows": s["windows"],
-                "discarded_tokens": s["discarded_tokens"],
-                "prefills": s["prefills"],
-                "prefill_chunks": s["prefill_chunks"],
-                "prefill_chunk_tokens": s["prefill_chunk_tokens"],
-                "host_stalls": s["host_stalls"],
-                "host_stall_s": s["host_stall_s"],
-                "retries": s["retries"],
-            }
+    cells = [(engine, engine_kw, label, fault_every)
+             for engine, engine_kw in ENGINES
+             for label, fault_every in (("steady", 0),
+                                        ("faulted", FAULT_EVERY))]
+    best: dict[str, dict] = {}
+    for trial in range(max(N_TRIALS, N_TRIALS_FAULTED)):
+        for engine, engine_kw, label, fault_every in cells:
+            if trial >= (N_TRIALS_FAULTED if fault_every else N_TRIALS):
+                continue
+            s = _serve_once(engine_kw, fault_every=fault_every)
+            key = f"{engine}/{label}"
+            if (key not in best or s["tokens_per_s_timed"]
+                    > best[key]["tokens_per_s_timed"]):
+                best[key] = s
+    for engine, engine_kw, label, fault_every in cells:
+        record["engines"].setdefault(engine, {})
+        s = best[f"{engine}/{label}"]
+        tps = s["tokens_per_s_timed"]
+        us_per_tok = (s["wall_s"] * 1e6 / max(s["timed_tokens"], 1))
+        note = (f"{s['faults_injected']}_faults_recovered" if fault_every
+                else f"{N_REQUESTS}req_x_{MAX_NEW}tok")
+        rows.append((f"serve_{engine}_{label}_tokens_per_s",
+                     f"{tps:.0f}tok/s {note}", us_per_tok))
+        for metric in ("latency", "ttft"):
+            for p in ("p50", "p99"):
+                v = s[f"{metric}_{p}_s"]
+                rows.append((f"serve_{engine}_{label}_{metric}_{p}",
+                             f"{v * 1e3:.1f}ms", v * 1e6))
+        record["engines"][engine][label] = {
+            "tokens_per_s": tps,
+            "latency_p50_s": s["latency_p50_s"],
+            "latency_p99_s": s["latency_p99_s"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "ttft_p99_s": s["ttft_p99_s"],
+            "wall_s": s["wall_s"],
+            "timed_tokens": s["timed_tokens"],
+            "faults_injected": s["faults_injected"],
+            "windows": s["windows"],
+            "discarded_tokens": s["discarded_tokens"],
+            "prefills": s["prefills"],
+            "prefill_chunks": s["prefill_chunks"],
+            "prefill_chunk_tokens": s["prefill_chunk_tokens"],
+            "host_stalls": s["host_stalls"],
+            "host_stall_s": s["host_stall_s"],
+            "retries": s["retries"],
+        }
     eng = record["engines"]
     blocking, overlap = f"window{WINDOW}_blocking", f"window{WINDOW}_overlap"
     for label in ("steady", "faulted"):
