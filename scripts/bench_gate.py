@@ -1,12 +1,15 @@
 #!/usr/bin/env python
 """Bench-regression tripwire over the BENCH_serving.json run history.
 
-Compares the latest recorded serving run against the previous run for each
-engine × scenario cell (and the paged capacity cell, when both runs carry
-it) and fails — exit 1 — if tokens/s dropped by more than the threshold
-(default 15%). With fewer than two runs in the history the gate skips
-cleanly (exit 0): a fresh clone or a brand-new benchmark has nothing to
-regress against.
+Compares the latest recorded serving run against the BEST of the last three
+earlier runs for each engine × scenario cell (and the paged capacity cell,
+when carried) and fails — exit 1 — if tokens/s dropped by more than the
+threshold (default 15%). Comparing against the best-of-3 baseline (not just
+the single previous run) means one noisy-but-green draw cannot ratchet the
+baseline down: a slow-but-passing run N doesn't lower the bar run N+1 must
+clear, because runs N-1 and N-2 still anchor it. With fewer than two runs in
+the history the gate skips cleanly (exit 0): a fresh clone or a brand-new
+benchmark has nothing to regress against.
 
 This reads the *committed* history only — it runs in milliseconds, so it sits
 in ``scripts/check.sh`` and CI as a tripwire: a PR that appends a regressed
@@ -68,21 +71,26 @@ def gate(history_path: str, max_regress: float) -> int:
     if not latest_cells:
         print("bench gate: latest run carries no comparable cells — skipping")
         return 0
-    # previous run = most recent earlier run sharing at least one cell
-    prev = None
+    # baseline = the 3 most recent earlier runs sharing at least one cell
+    # with the latest; each cell is judged against its best value among them
+    baseline_runs = []
     for cand in reversed(runs[:-1]):
         if set(_cells(cand)) & set(latest_cells):
-            prev = cand
+            baseline_runs.append(cand)
+        if len(baseline_runs) == 3:
             break
-    if prev is None:
+    if not baseline_runs:
         print("bench gate: no earlier run shares a cell with the latest — "
               "skipping")
         return 0
-    prev_cells = _cells(prev)
+    baseline_cells: dict[str, float] = {}
+    for cand in baseline_runs:
+        for name, v in _cells(cand).items():
+            baseline_cells[name] = max(baseline_cells.get(name, v), v)
     failures = []
     compared = 0
-    for name in sorted(set(latest_cells) & set(prev_cells)):
-        old, new = prev_cells[name], latest_cells[name]
+    for name in sorted(set(latest_cells) & set(baseline_cells)):
+        old, new = baseline_cells[name], latest_cells[name]
         if old <= 0:
             continue
         compared += 1
@@ -92,8 +100,9 @@ def gate(history_path: str, max_regress: float) -> int:
               f"({change:+6.1%}) {status}")
         if change < -max_regress:
             failures.append((name, old, new, change))
+    revs = ",".join(r.get("git_rev", "?") for r in baseline_runs)
     print(f"bench gate: compared {compared} cell(s), "
-          f"{latest.get('git_rev', '?')} vs {prev.get('git_rev', '?')}")
+          f"{latest.get('git_rev', '?')} vs best of [{revs}]")
     if failures:
         for name, old, new, change in failures:
             print(f"bench gate: REGRESSION {name}: {old:.1f} -> {new:.1f} "

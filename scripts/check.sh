@@ -62,8 +62,13 @@ run_bench_smoke() {
 echo "== tier-1: python -m pytest -q ${PYTEST_ARGS[*]:-} =="
 stage "tier-1 tests" run_pytest
 
+# the speculative smoke is cheap enough to keep in the --fast loop: it is
+# the only end-to-end guard on draft/verify bit-exactness
+echo "== spec smoke: benchmarks.serving --smoke --spec =="
+stage "spec smoke" run_bench_smoke --spec
+
 if [ "$FAST" -eq 1 ]; then
-    echo "(--fast: skipping smokes + bench gate)"
+    echo "(--fast: skipping remaining smokes + bench gate)"
     exit $status
 fi
 
@@ -85,9 +90,10 @@ stage "bench gate" python scripts/bench_gate.py
 if [ "${#PYTEST_ARGS[@]}" -gt 0 ]; then
     # tier-1 was filtered by pass-through args: still guarantee the serving
     # suites ran (an unfiltered tier-1 run already collects them)
-    echo "== serve tests: tests/test_serve_overlap.py tests/test_serve_paged.py =="
+    echo "== serve tests: tests/test_serve_{overlap,paged,spec}.py =="
     stage "serve tests" python -m pytest -q tests/test_serve_overlap.py \
-        tests/test_serve_paged.py tests/test_page_allocator.py
+        tests/test_serve_paged.py tests/test_page_allocator.py \
+        tests/test_serve_spec.py
 fi
 
 exit $status

@@ -218,32 +218,40 @@ class DeviceFuture:
         host-bound one without perturbing async dispatch."""
         return self._waited or _is_ready(self.word)
 
-    def fault_steps(self) -> Optional[np.ndarray]:
+    def fault_steps(self, *, ignore: int = 0) -> Optional[np.ndarray]:
         """Per-rank index of the first faulting window step, or -1 if clean.
 
         Requires window ``history``; returns an ``(ranks,)`` int array. Tokens
         produced by steps ``< fault_steps()[r]`` on rank/slot ``r`` are a valid
         prefix (their words were zero), so the host commits them and replays
-        only from the fault boundary.
+        only from the fault boundary. ``ignore`` masks code bits out before
+        the scan — the speculative window passes its attribution-only
+        ``DRAFT_REJECT`` lane here, so a speculation miss is never mistaken
+        for the first *faulting* step and the clean prefix stays as long as
+        the real fault allows.
         """
         if self.history is None:
             return None
-        hist = np.asarray(jax.device_get(self.history))
+        hist = np.asarray(jax.device_get(self.history)).astype(np.uint32)
+        hist &= np.uint32(~np.uint32(ignore))
         bad = hist != 0
         return np.where(bad.any(axis=0), bad.argmax(axis=0), -1).astype(np.int64)
 
-    def fault_codes(self) -> Optional[np.ndarray]:
+    def fault_codes(self, *, ignore: int = 0) -> Optional[np.ndarray]:
         """Per-rank OR of the window history — the combined fault class each
         rank/slot latched, or 0 if clean. Unlike the enumeration table (whose
         capacity is ``max_errors``), this never truncates, so a host that must
         pick a per-slot recovery lane (e.g. the paged-KV replica separating
         ``PAGE_FAULT`` ledger repairs from ``STATE_FAULT`` recomputes) can
-        attribute every slot even under a burst of simultaneous faults.
+        attribute every slot even under a burst of simultaneous faults — and,
+        with the default ``ignore=0``, distinguish speculation misses
+        (``DRAFT_REJECT``) from real faults in the same readback.
         Requires window ``history``; returns a ``(ranks,)`` uint32 array.
         """
         if self.history is None:
             return None
         hist = np.asarray(jax.device_get(self.history)).astype(np.uint32)
+        hist &= np.uint32(~np.uint32(ignore))
         out = np.zeros(hist.shape[1], np.uint32)
         for row in hist:
             out |= row

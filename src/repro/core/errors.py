@@ -51,6 +51,13 @@ class ErrorCode(enum.IntFlag):
     CHECKPOINT_IO = 1 << 17        # async checkpoint write failed
     PAGE_FAULT = 1 << 18           # paged KV: write landed on an unmapped page
                                    # (ownership-ledger / page-table corruption)
+    # -- attribution-only lanes (never trigger recovery) --------------------------
+    DRAFT_REJECT = 1 << 19         # speculative decode: a drafted token was
+                                   # rejected by the full-model verify this
+                                   # window step — expected behaviour recorded
+                                   # in-band for exact (step, slot) attribution
+                                   # of speculation misses; masked out of the
+                                   # fault-raising word at the wait
     # -- hard faults (ULFM territory) ---------------------------------------------
     RANK_FAILED = 1 << 24          # peer process/node lost
     COMM_CORRUPTED = 1 << 25       # communicator destroyed during unwinding
@@ -70,6 +77,12 @@ class ErrorCode(enum.IntFlag):
 
 # Encoded "no error" word for device-side channels.
 OK_WORD = 0
+
+# Codes that attribute expected in-band events (speculation misses) rather than
+# faults: carried in the per-(step, slot) word history for exact attribution,
+# but masked out of the combined word before the wait converts it to an
+# exception — they must never trigger recovery.
+ATTRIBUTION_ONLY = ErrorCode.DRAFT_REJECT
 
 
 @dataclass(frozen=True)

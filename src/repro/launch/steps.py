@@ -14,6 +14,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..core.detect import ProbeConfig, loss_probe, state_probe, step_probe
+from ..core.errors import ErrorCode
 from ..core.faults import inject_batch, inject_grads, inject_loss
 from ..models import build_model
 from ..optim import AdamWConfig, adamw_update, init_opt_state, reset_moments
@@ -58,6 +59,17 @@ class PerfOptions:
                       full-attention caches become a shared page pool addressed
                       through a per-slot page table, so long prompts and short
                       chats share HBM; 0 = one contiguous block per slot.
+    speculate       — speculative decode windows (``make_speculative_decode_
+                      window``): each window step drafts ``draft_len`` tokens
+                      with a shallow-exit self-draft over the first
+                      ``draft_layers`` layers, then verifies all drafts in one
+                      batched full-model forward — up to ``draft_len + 1``
+                      tokens per full-model step, token-bit-exact vs the plain
+                      window engine; rejected drafts are attributed in-band
+                      via ``ErrorCode.DRAFT_REJECT``. Requires ``window > 0``
+                      and a pure full-attention architecture.
+    draft_len       — tokens proposed per speculative window step (D).
+    draft_layers    — layers of the shallow-exit drafter.
     """
 
     microbatch: int = 0
@@ -70,11 +82,14 @@ class PerfOptions:
     donate: bool = True
     overlap: bool = True
     page: int = 0
+    speculate: bool = False
+    draft_len: int = 3
+    draft_layers: int = 1
 
     @classmethod
     def parse(cls, spec: str) -> "PerfOptions":
         """'mb=8,ce=2048,sp=1,cacheseq=1,probes=0,ep=1,window=8,donate=1,
-        overlap=1,page=16' → PerfOptions."""
+        overlap=1,page=16,spec=1,dlen=3,dlayers=1' → PerfOptions."""
         kw: dict = {}
         for part in (spec or "").split(","):
             if not part:
@@ -84,10 +99,13 @@ class PerfOptions:
                  "cacheseq": "cache_seq_model", "probes": "probes",
                  "ep": "ep_constraint", "win": "window", "window": "window",
                  "donate": "donate", "overlap": "overlap",
-                 "page": "page"}[k]
+                 "page": "page", "spec": "speculate", "speculate": "speculate",
+                 "dlen": "draft_len", "draft_len": "draft_len",
+                 "dlayers": "draft_layers", "draft_layers": "draft_layers"}[k]
             kw[k] = bool(int(v)) if k in ("seq_shard", "cache_seq_model",
                                           "probes", "ep_constraint",
-                                          "donate", "overlap") else int(v)
+                                          "donate", "overlap",
+                                          "speculate") else int(v)
         return cls(**kw)
 
 
@@ -437,6 +455,197 @@ def make_prefill_decode_window(cfg: ModelConfig,
             (jnp.asarray(chunk, jnp.int32),
              jnp.arange(window, dtype=jnp.int32)))
         return toks, words.astype(jnp.uint32), next_tok, caches
+
+    return jax.jit(window_step, donate_argnums=(1,) if donate else ())
+
+
+def make_speculative_decode_window(cfg: ModelConfig,
+                                   probe_cfg: ProbeConfig | None = None, *,
+                                   window: int, draft_len: int,
+                                   draft_layers: int, donate: bool = True,
+                                   paged=None):
+    """Speculative decode window: draft-and-verify inside one dispatch.
+
+    The zero-sync window (:func:`make_decode_window`) pays one full-model
+    forward per emitted token. This window makes the *emission rate* exceed
+    the full-model step rate while keeping the paper's asynchrony contract:
+    each of the K window steps
+
+    1. **drafts** ``D = draft_len`` tokens per slot with a shallow-exit
+       self-draft — the first ``draft_layers`` layers of the *same* weights
+       (reusing the same caches, hence the same paged addressing), then the
+       final norm + unembedding;
+    2. **verifies** all ``D+1`` positions in ONE batched full-model forward
+       (:meth:`~repro.models.model.Model.verify_step`): greedy acceptance —
+       draft ``d_{i+1}`` survives iff it equals the full model's argmax after
+       ``d_i`` — so every emitted token is a full-model argmax and the stream
+       is **token-bit-exact** vs the plain window engine, steady and faulted
+       (the verify stack reproduces the decode step's arithmetic per row);
+    3. records rejected drafts as the in-band, attribution-only
+       ``ErrorCode.DRAFT_REJECT`` lane of the ``(K, slots)`` word history —
+       a speculation miss is a *local event carried through asynchronous
+       execution*, exactly like the paper's soft faults, except the host
+       masks it out of the fault-raising word at the wait.
+
+    A rejected draft's cache writes are never rolled back: full-attention
+    K/V writes are positional and idempotent, and every stale entry sits at a
+    position strictly beyond the accepted prefix, so it is overwritten before
+    any masked read reaches it. This is why speculation requires a pure
+    full-attention architecture (ring buffers and recurrent states advance
+    destructively; :meth:`Model.supports_speculation`).
+
+    Signature of the returned jitted function::
+
+      window_step(params, caches, tokens, pos, chunk, rem[, table])
+        caches  pytree, leaves (S, ...)   donated when ``donate``
+        tokens  (S, 1, 1) int32           greedy feedback feed per slot
+        pos     (S,) int32                per-slot absolute position
+                                          (device-resident: advance is
+                                          data-dependent, so the position
+                                          chain must never touch the host)
+        chunk   (K, D+1, S) int32         prompt tokens per step × row × slot
+        rem     (S,) int32                total pending prompt tokens per
+                                          slot this window (≤ K·(D+1))
+      → (tokens (K, S, D+1) int32,        full-model argmaxes per step × slot
+         counts (K, S) int32,             consumed positions per step × slot
+                                          (prompt rows + accepted tokens,
+                                          1 ≤ count ≤ D+1)
+         words  (K, S) uint32,            per-(step, slot) error-word history
+         next_tok (S, 1, 1) int32,        device-resident feed for window N+1
+         next_pos (S,) int32,             device-resident position chain
+         new caches)
+
+    Prompt feed rides the verify width: step k of lane s force-feeds its
+    next ``rem_k = clip(rem - k·(D+1), 0, D+1)`` pending prompt tokens into
+    verify rows ``0 .. rem_k-1`` (forced accepted — they are given, not
+    speculated), so admission/LFLR prefill advances up to D+1 tokens per
+    full-model step instead of one, and speculation starts *inside* the flip
+    step: rows past the prompt chain off the last prompt token's argmax.
+    Only rows ``rem_k-1 .. counts[k,s]-1`` of a flip step (and every row
+    ``< counts`` of later steps) carry committable tokens; the host commits
+    that variable-length stream per lane.
+
+    With ``paged`` the caches argument is the hybrid pool tree plus a
+    trailing ``table`` argument; gather/scatter run once per window step
+    around the draft+verify pair, and the page probe checks the pages
+    covering the *accepted* prefix (a dropped write on an accepted position
+    is ledger divergence; rejected positions' dropped writes are not).
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if draft_len < 1:
+        raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+    if not 0 < draft_layers < cfg.num_layers:
+        raise ValueError(
+            f"draft_layers must be in [1, num_layers), got {draft_layers} "
+            f"for {cfg.num_layers} layers")
+    model = build_model(cfg)
+    if not model.supports_speculation():
+        raise ValueError(
+            f"{cfg.name}: speculative decode windows require a pure "
+            "full-attention, non-MoE architecture (ring buffers and "
+            "recurrent states cannot absorb rejected-draft over-writes)")
+    D = int(draft_len)
+    # probe_cfg is accepted for signature parity with the other window
+    # factories; the speculative window probes logits only (the gated
+    # architectures have no recurrent state to state-probe), with the same
+    # finite-check-only threshold the plain decode step applies to logits.
+    probe_threshold = ProbeConfig(loss_divergence_threshold=jnp.inf)
+
+    def _verify_one(params, cache, tokens, pos):
+        logits, cache = model.verify_step(params, tokens, cache, pos)
+        word = loss_probe(jnp.max(jnp.abs(logits)), probe_threshold)
+        return logits, cache, word
+
+    verify_slot = jax.vmap(_verify_one, in_axes=(None, 0, 0, 0))
+    draft_chain_slot = jax.vmap(
+        lambda params, cache, tok, pos, override, n_forced: model.draft_chain(
+            params, tok, cache, pos, draft_layers=draft_layers, draft_len=D,
+            override=override, n_forced=n_forced),
+        in_axes=(None, 0, 0, 0, 0, 0))
+    REJECT = jnp.uint32(int(ErrorCode.DRAFT_REJECT))
+
+    def macro_step(params, views, tok, p, chunk_rows, k, rem):
+        """One draft+verify step on (gathered) per-slot cache views.
+
+        ``chunk_rows`` is this step's (D+1, S) prompt-feed block; ``rem`` the
+        per-slot total pending prompt tokens for the whole window. Rows still
+        inside the prompt are force-fed (and force-accepted); the rest chain
+        off the drafter.
+        """
+        rem_k = jnp.clip(rem - k * (D + 1), 0, D + 1)       # (S,) prompt rows
+        # shallow-exit draft chain: D greedy proposals per slot in one call,
+        # each row's input overridden by the prompt while the prompt lasts.
+        # The drafts' shallow-layer cache writes are recomputed and
+        # overwritten by the verify pass below, so they never leak into
+        # verified state.
+        t0 = jnp.where((rem_k > 0)[:, None, None],
+                       chunk_rows[0][:, None, None], tok)
+        proposals, views = draft_chain_slot(
+            params, views, t0, p, jnp.transpose(chunk_rows[1:]), rem_k)
+        seq = jnp.concatenate([t0[:, 0, :], proposals[:, 0, :]],
+                              axis=1)                       # (S, D+1)
+        # batched full-model verify over all D+1 positions
+        vlogits, views, words = verify_slot(params, views, seq[:, None, :], p)
+        g = jnp.argmax(vlogits[:, 0, :, :], axis=-1).astype(jnp.int32)
+        # acceptance: prompt rows are given (forced), then the leading run of
+        # drafts matching the full model's own argmax chain; +1 for the bonus
+        # token after the run
+        rows = jnp.arange(1, D + 1, dtype=jnp.int32)[None, :]
+        ok = (rows < rem_k[:, None]) | (g[:, :D] == seq[:, 1:])
+        a = 1 + jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+        a = a.astype(jnp.int32)
+        # forced rows (row 0 is always given: prompt or committed feedback);
+        # a speculation miss latched iff any *actual* draft was rejected
+        forced = jnp.maximum(rem_k, 1)
+        words = words | jnp.where((forced <= D) & (a < D + 1), REJECT,
+                                  jnp.uint32(0))
+        next_tok = jnp.take_along_axis(g, (a - 1)[:, None], axis=1)
+        return views, next_tok[:, :, None], p + a, g, a, words
+
+    if paged is not None:
+
+        def paged_window_step(params, hybrid, tokens, pos, chunk, rem, table):
+            rem = jnp.asarray(rem, jnp.int32)
+
+            def body(carry, xs):
+                chunk_rows, k = xs
+                hybrid, tok, p = carry
+                views = paged.gather(hybrid, table)
+                views, ntok, np_, g, a, words = macro_step(
+                    params, views, tok, p, chunk_rows, k, rem)
+                hybrid = paged.scatter(hybrid, views, table)
+                words = words | paged.probe(table, p + a - 1)
+                return (hybrid, ntok, np_), (g, a, words)
+
+            (hybrid, next_tok, next_pos), (toks, counts, words) = jax.lax.scan(
+                body, (hybrid, jnp.asarray(tokens, jnp.int32),
+                       jnp.asarray(pos, jnp.int32)),
+                (jnp.asarray(chunk, jnp.int32),
+                 jnp.arange(window, dtype=jnp.int32)))
+            return (toks, counts.astype(jnp.int32), words.astype(jnp.uint32),
+                    next_tok, next_pos, hybrid)
+
+        return jax.jit(paged_window_step,
+                       donate_argnums=(1,) if donate else ())
+
+    def window_step(params, caches, tokens, pos, chunk, rem):
+        rem = jnp.asarray(rem, jnp.int32)
+
+        def body(carry, xs):
+            chunk_rows, k = xs
+            caches, tok, p = carry
+            caches, ntok, np_, g, a, words = macro_step(
+                params, caches, tok, p, chunk_rows, k, rem)
+            return (caches, ntok, np_), (g, a, words)
+
+        (caches, next_tok, next_pos), (toks, counts, words) = jax.lax.scan(
+            body, (caches, jnp.asarray(tokens, jnp.int32),
+                   jnp.asarray(pos, jnp.int32)),
+            (jnp.asarray(chunk, jnp.int32),
+             jnp.arange(window, dtype=jnp.int32)))
+        return (toks, counts.astype(jnp.int32), words.astype(jnp.uint32),
+                next_tok, next_pos, caches)
 
     return jax.jit(window_step, donate_argnums=(1,) if donate else ())
 

@@ -356,6 +356,22 @@ def init_kv_cache(batch: int, length: int, n_kv: int, head_dim: int, dtype):
     }
 
 
+def _attn_out(probs, vr, wo, dtype):
+    """probs·V contraction + output projection, in forms whose XLA-CPU
+    lowering is *query-row-count invariant*: per-(batch, head) [s,t]×[t,d]
+    for probs·V and a flat [s, h·e]×[h·e, d] matmul for the projection.
+    The naive ``bhst,bthd->bshd`` / ``bshe,hed->bsd`` einsums tile (and
+    therefore accumulate) differently for different ``s``, which would break
+    the speculative verify's bit-equality with single-token decode — these
+    forms are measured stable, so decode (s=1) and verify (s=T) agree
+    bitwise. Returns the projected output (B, S, d_model)."""
+    vt = jnp.transpose(vr.astype(jnp.float32), (0, 2, 1, 3))   # (B,H,T,d)
+    out = jnp.einsum("bhst,bhtd->bshd", probs, vt)
+    o = out.astype(dtype)
+    B, S, H, E = o.shape
+    return o.reshape(B, S, H * E) @ wo.reshape(H * E, -1)
+
+
 def attention_decode(p, x, cache, pos, cfg, *, window: int = 0,
                      impl: str = "ref"):
     """One-token decode. ``cache`` holds (k, v) of capacity T (full) or W (ring).
@@ -398,8 +414,55 @@ def attention_decode(p, x, cache, pos, cfg, *, window: int = 0,
                         kr.astype(jnp.float32)) / jnp.sqrt(float(hd))
     scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhst,bthd->bshd", probs, vr.astype(jnp.float32))
-    out = jnp.einsum("bshe,hed->bsd", out.astype(x.dtype), p["wo"])
+    out = _attn_out(probs, vr, p["wo"], x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def attention_verify(p, x, cache, pos, cfg):
+    """Multi-token decode ("verify"): T new tokens at positions
+    ``pos .. pos+T-1`` against an existing full-attention cache.
+
+    The speculative decode window's verification pass: all T new K/V entries
+    are written first (out-of-capacity positions are *dropped*, never clamped
+    — a clamp would clobber the last in-range entry before an in-range query
+    reads it), then every query attends over the full capacity with its own
+    per-position causal mask. Each query row performs exactly the arithmetic
+    of :func:`attention_decode` at that position (same projections, same rope,
+    same full-capacity scores + masked softmax), so the verified logits — and
+    the K/V entries left in the cache — are bit-equal to T sequential decode
+    steps over the same tokens. Full (non-windowed) attention only: ring
+    buffers can not absorb speculative over-writes (a rejected draft's write
+    would destroy the ring entry a later real step still attends).
+    """
+    B, T = x.shape[:2]
+    hd = cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    qpos = pos + jnp.arange(T, dtype=jnp.int32)
+    posv = jnp.broadcast_to(qpos[None, :], (B, T))
+    if cfg.rope_style != "none":
+        q = apply_rope(q, posv, theta=cfg.rope_theta, style=cfg.rope_style,
+                       fraction=cfg.rope_fraction)
+        k_new = apply_rope(k_new, posv, theta=cfg.rope_theta,
+                           style=cfg.rope_style, fraction=cfg.rope_fraction)
+    cap = cache["k"].shape[1]
+    k = cache["k"].at[:, qpos].set(k_new, mode="drop")
+    v = cache["v"].at[:, qpos].set(v_new, mode="drop")
+
+    slots = jnp.arange(cap)
+    valid = slots[None, :] <= qpos[:, None]          # (T, cap) per-query mask
+
+    group = cfg.num_heads // cfg.num_kv_heads
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    scores = jnp.where(valid[None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # _attn_out's row-count-invariant contractions are what make this batched
+    # pass bit-equal to T sequential decode steps (measured — see
+    # tests/test_serve_spec.py); the naive einsum forms tile differently for
+    # T > 1 and diverge in low-order bits.
+    out = _attn_out(probs, vr, p["wo"], x.dtype)
     return out, {"k": k, "v": v}
 
 

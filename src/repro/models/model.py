@@ -25,8 +25,11 @@ from .layers import (
     unembed,
 )
 from .transformer import (
+    _draft_layer_slices,
+    apply_block_decode,
     apply_stack_decode,
     apply_stack_train,
+    apply_stack_verify,
     init_stack,
     init_stack_cache,
 )
@@ -138,6 +141,80 @@ class Model:
         logits = unembed(params.get("unembed"), params["embed"], x,
                          cfg.tie_embeddings, cfg.logit_softcap)
         return logits, new_cache
+
+    def supports_speculation(self) -> bool:
+        """Speculative decode windows need every cache write to be positional
+        and idempotent, so a rejected draft's stale entries are overwritten
+        before anything reads them: pure full-attention stacks only (ring
+        buffers and recurrent states advance destructively), and no MoE (the
+        router's capacity accounting couples tokens across the verify batch,
+        breaking per-row equality with sequential decode)."""
+        cfg = self.cfg
+        return (all(b == "attn" for b in cfg.pattern_layers)
+                and not cfg.is_moe)
+
+    def verify_step(self, params, tokens, cache, pos):
+        """T-token decode ("speculative verify") against an existing cache.
+
+        tokens: (B, T) int32 at positions ``pos .. pos+T-1``; pos: scalar
+        int32. Returns (fp32 logits (B, T, V), new cache). Row ``t`` computes
+        exactly :meth:`decode_step` at position ``pos+t`` (the verify stack
+        mirrors the decode stack per token row), so accepted tokens — and the
+        cache entries they leave behind — are bit-equal to sequential decode.
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = embed_tokens(params["embed"], tokens, dt)
+        if cfg.embed_scale != 1.0:
+            x = x * jnp.asarray(cfg.embed_scale, dt)
+        x, new_cache = apply_stack_verify(params["stack"], x, cache, pos, cfg)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params.get("unembed"), params["embed"], x,
+                         cfg.tie_embeddings, cfg.logit_softcap)
+        return logits, new_cache
+
+    def draft_chain(self, params, token, cache, pos, *, draft_layers: int,
+                    draft_len: int, override=None, n_forced=None):
+        """``draft_len`` chained shallow-exit draft steps in ONE call.
+
+        The chain slices the drafter's layer params/caches out of the
+        period-stacked trees once and writes them back once, so the stacked-
+        leaf copies (the dominant drafter cost at small scale) don't scale
+        with draft depth. ``override``/``n_forced`` force-feed pending prompt
+        tokens through the chain: proposal ``d+1`` is replaced by
+        ``override[d]`` while ``d+1 < n_forced`` (the speculative window's
+        verify-width prompt feed).
+
+        token: (B, 1) int32 at position ``pos``. Returns
+        (proposals (B, draft_len) int32, new cache).
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        work = {"periods": dict(cache["periods"]), "rest": list(cache["rest"])}
+        layers = _draft_layer_slices(params["stack"], work, cfg, draft_layers)
+        local = [pc for _, pc, _, _ in layers]
+        tok = token
+        outs = []
+        for d in range(draft_len):
+            x = embed_tokens(params["embed"], tok, dt)
+            if cfg.embed_scale != 1.0:
+                x = x * jnp.asarray(cfg.embed_scale, dt)
+            for i, (pp, _, btype, _) in enumerate(layers):
+                x, local[i], _ = apply_block_decode(pp, x, local[i], pos + d,
+                                                    cfg, btype)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            logits = unembed(params.get("unembed"), params["embed"], x,
+                             cfg.tie_embeddings, cfg.logit_softcap)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(
+                jnp.int32)[:, None]
+            if override is not None:
+                nxt = jnp.where(d + 1 < n_forced, override[d:d + 1][None, :],
+                                nxt)
+            outs.append(nxt)
+            tok = nxt
+        for i, (_, _, _, wb) in enumerate(layers):
+            wb(work, local[i])
+        return jnp.concatenate(outs, axis=1), work
 
     def prefill(self, params, tokens, *, img_embeds=None, impl: str = "auto"):
         """Prefill returning logits only (the prefill_32k cells lower this).

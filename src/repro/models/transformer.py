@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from .attention import (
     attention_decode,
     attention_train,
+    attention_verify,
     cross_attention_decode,
     init_attention,
     init_kv_cache,
@@ -238,6 +239,100 @@ def apply_block_decode(p, x, cache, pos, cfg, btype: str):
     else:
         raise ValueError(btype)
     return x, new_cache, drop
+
+
+def apply_block_verify(p, x, cache, pos, cfg, btype: str):
+    """Multi-token decode block (speculative verify). Full attention only:
+    ring buffers and recurrent states advance destructively, so they cannot
+    absorb the over-writes a rejected draft leaves behind."""
+    if btype != "attn":
+        raise ValueError(
+            f"speculative verify supports full-attention blocks only, "
+            f"got {btype!r}")
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    a, new_cache = attention_verify(p["attn"], h, cache, pos, cfg)
+    x = x + a
+    h = apply_norm(p["norm2"], x, cfg.norm)
+    f, drop = _ffn(p, h, cfg)
+    x = x + f
+    return x, new_cache, drop
+
+
+def apply_stack_verify(stack, x, caches, pos, cfg):
+    """T-token verify through the whole stack; returns (x, new_caches).
+
+    Structure mirrors :func:`apply_stack_decode` exactly (same period scan,
+    same remainder unroll) with the multi-token verify block, so each token
+    row computes the single-token decode arithmetic at its own position.
+    """
+
+    def period_body(x, inputs):
+        pp, pc = inputs
+        new_pc = {}
+        for i, btype in enumerate(cfg.block_pattern):
+            x, c, _ = apply_block_verify(pp[f"b{i}"], x, pc[f"b{i}"], pos,
+                                         cfg, btype)
+            new_pc[f"b{i}"] = c
+        return x, new_pc
+
+    if cfg.num_periods > 0:
+        if cfg.scan_layers:
+            x, new_periods = jax.lax.scan(
+                period_body, x, (stack["periods"], caches["periods"]))
+        else:
+            outs = []
+            for i in range(cfg.num_periods):
+                pp = jax.tree_util.tree_map(lambda a: a[i], stack["periods"])
+                pc = jax.tree_util.tree_map(lambda a: a[i], caches["periods"])
+                x, npc = period_body(x, (pp, pc))
+                outs.append(npc)
+            new_periods = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+    else:
+        new_periods = caches["periods"]
+    new_rest = []
+    for i, btype in enumerate(cfg.remainder_layers):
+        x, c, _ = apply_block_verify(stack["rest"][i], x, caches["rest"][i],
+                                     pos, cfg, btype)
+        new_rest.append(c)
+    return x, {"periods": new_periods, "rest": new_rest}
+
+
+def _draft_layer_slices(stack, caches, cfg, num_layers: int):
+    """(params, cache, writeback) triple per drafted layer.
+
+    Period-stacked layers are sliced out once; ``writeback(caches, new)``
+    re-inserts the advanced per-layer caches in one ``.at[c].set`` per layer
+    — the draft *chain* slices and writes back once around all D steps, so
+    the stacked-leaf copies don't scale with draft depth.
+    """
+    n_scan = cfg.num_periods * cfg.period
+    if not 0 < num_layers <= cfg.num_layers:
+        raise ValueError(
+            f"draft layers must be in [1, {cfg.num_layers}], got {num_layers}")
+    layers = []
+    for l in range(num_layers):
+        if l < n_scan:
+            c, pat = l // cfg.period, l % cfg.period
+            key = f"b{pat}"
+            pp = jax.tree_util.tree_map(lambda a: a[c], stack["periods"][key])
+            pc = jax.tree_util.tree_map(lambda a: a[c], caches["periods"][key])
+
+            def wb(caches, nc, c=c, key=key):
+                caches["periods"][key] = jax.tree_util.tree_map(
+                    lambda full, one: full.at[c].set(one),
+                    caches["periods"][key], nc)
+
+            layers.append((pp, pc, cfg.block_pattern[pat], wb))
+        else:
+            i = l - n_scan
+
+            def wb(caches, nc, i=i):
+                caches["rest"][i] = nc
+
+            layers.append((stack["rest"][i], caches["rest"][i],
+                           cfg.remainder_layers[i], wb))
+    return layers
 
 
 def apply_stack_decode(stack, x, caches, pos, cfg):

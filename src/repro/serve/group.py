@@ -41,6 +41,7 @@ from ..launch.steps import (
     make_decode_window,
     make_prefill_decode_window,
     make_slot_decode_step,
+    make_speculative_decode_window,
 )
 from ..models import build_model
 from .metrics import ServeMetrics
@@ -150,12 +151,17 @@ class ServeGroup:
                  prefill_budget: Optional[int] = None,
                  paged: bool = False, page_size: int = 8,
                  page_budget: Optional[int] = None,
-                 page_watermark: int = 0):
+                 page_watermark: int = 0,
+                 speculate: bool = False, draft_len: int = 3,
+                 draft_layers: int = 1):
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
         if paged and not window:
             # fail here, not as N concurrent thread deaths inside serve()
             raise ValueError("paged=True requires window mode (window=K)")
+        if speculate and not (window and overlap):
+            raise ValueError(
+                "speculate=True requires window mode with overlap=True")
         self.cfg = cfg
         self.nranks = nranks
         self.num_slots = num_slots
@@ -170,6 +176,9 @@ class ServeGroup:
         self.page_size = page_size
         self.page_budget = page_budget
         self.page_watermark = page_watermark
+        self.speculate = bool(speculate)
+        self.draft_len = int(draft_len)
+        self.draft_layers = int(draft_layers)
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
         # — each paged replica owns its own pool + table, but the layout (and
@@ -191,6 +200,11 @@ class ServeGroup:
                                               donate=bool(self.paged and donate))
         if not self.window:
             self._window_fn = None
+        elif self.speculate:
+            self._window_fn = make_speculative_decode_window(
+                cfg, probe_cfg, window=self.window, draft_len=self.draft_len,
+                draft_layers=self.draft_layers, donate=donate,
+                paged=self._layout)
         elif self.overlap:
             self._window_fn = make_prefill_decode_window(
                 cfg, probe_cfg, window=self.window, donate=donate,
@@ -235,7 +249,9 @@ class ServeGroup:
                 paged=self.paged, page_size=self.page_size,
                 page_budget=self.page_budget,
                 page_watermark=self.page_watermark,
-                paged_layout=self._layout)
+                paged_layout=self._layout,
+                speculate=self.speculate, draft_len=self.draft_len,
+                draft_layers=self.draft_layers)
             report = RankReport(rank=ctx.rank, metrics=replica.metrics)
             for round_i in range(max_rounds):
                 for spec in faults.at(round_i, ctx.rank):

@@ -54,6 +54,12 @@ class ServeMetrics:
         self.peak_pages_in_use = 0           # paged KV: high-water pool usage
         self.peak_active_slots = 0           # most lanes concurrently serving
                                              # (the paged capacity headline)
+        self.draft_tokens = 0                # speculation: tokens proposed by
+                                             # the shallow-exit drafter
+        self.accepted_draft_tokens = 0       # ... accepted by the full-model
+                                             # verify (DRAFT_REJECT lane
+                                             # carries the misses in-band)
+        self._spec_per_slot: dict[int, list] = {}   # slot -> [drafted, accepted]
 
     # ------------------------------------------------------------- recording
     def record_step(self, committed_tokens: int) -> None:
@@ -106,6 +112,20 @@ class ServeMetrics:
             self.pages_freed += freed
             self.peak_pages_in_use = max(self.peak_pages_in_use, in_use)
 
+    def record_spec(self, drafted: int, accepted: int,
+                    per_slot: Optional[dict] = None) -> None:
+        """One retired speculative window's draft/verify outcome. ``per_slot``
+        maps slot -> (drafted, accepted) so acceptance is attributable per
+        lane (a single always-rejecting sequence shows up here, not just as a
+        diluted global average)."""
+        with self._lock:
+            self.draft_tokens += drafted
+            self.accepted_draft_tokens += accepted
+            for slot, (d, a) in (per_slot or {}).items():
+                cell = self._spec_per_slot.setdefault(slot, [0, 0])
+                cell[0] += d
+                cell[1] += a
+
     def record_page_eviction(self) -> None:
         """A lane preempted (and requeued) to free pages under pressure."""
         with self._lock:
@@ -150,10 +170,34 @@ class ServeMetrics:
             return out
 
     def tokens_per_s(self) -> float:
+        """Committed tokens per wall second. Already speculation-adjusted:
+        only tokens the verify accepted and the scheduler committed count —
+        drafted-but-rejected work never inflates throughput."""
         with self._lock:
             if self._t0 is None or self._t_last is None or self._t_last <= self._t0:
                 return 0.0
             return self.decode_tokens / (self._t_last - self._t0)
+
+    def tokens_per_step(self) -> float:
+        """Committed tokens per decode step (window steps count K). The
+        speculation headline: > 1 means draft-and-verify emits more than one
+        token per full-model forward."""
+        with self._lock:
+            if not self.decode_steps:
+                return 0.0
+            return self.decode_tokens / self.decode_steps
+
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the full-model verify accepted."""
+        with self._lock:
+            if not self.draft_tokens:
+                return 0.0
+            return self.accepted_draft_tokens / self.draft_tokens
+
+    def acceptance_rate_per_slot(self) -> dict[int, float]:
+        with self._lock:
+            return {slot: (a / d if d else 0.0)
+                    for slot, (d, a) in sorted(self._spec_per_slot.items())}
 
     def latency_percentiles(self, ps=(50, 99)) -> dict[str, float]:
         with self._lock:
@@ -194,6 +238,13 @@ class ServeMetrics:
             "page_evictions": self.page_evictions,
             "peak_pages_in_use": self.peak_pages_in_use,
             "peak_active_slots": self.peak_active_slots,
+            "draft_tokens": self.draft_tokens,
+            "accepted_draft_tokens": self.accepted_draft_tokens,
+            "rejected_draft_tokens": (self.draft_tokens
+                                      - self.accepted_draft_tokens),
+            "acceptance_rate": self.acceptance_rate(),
+            "acceptance_rate_per_slot": self.acceptance_rate_per_slot(),
+            "tokens_per_step": self.tokens_per_step(),
             "tokens_per_s": self.tokens_per_s(),
             "faults": self.fault_counts(),
             "retries": sum(r.retries for r in self.responses),

@@ -31,6 +31,19 @@ token through the same decode step). A fault latched during a chunk is
 attributed through the same ``(K, slots)`` history and re-queues the lane
 (cache reset + chunk from position 0) without a single host sync.
 
+With ``speculate=True`` (window + overlap mode, full-attention archs) the
+window becomes a **speculative decode window**
+(:func:`~repro.launch.steps.make_speculative_decode_window`): every window
+step drafts ``draft_len`` tokens with a shallow-exit self-draft and verifies
+them in one batched full-model forward, emitting 1..D+1 tokens per step —
+token-bit-exact vs the plain engine, since every emitted token is a
+full-model argmax. The commit loop consumes a per-(step, slot) accepted-count
+readback instead of assuming K tokens (EOS / deadline / fault boundaries cut
+the flattened accepted stream), the position chain moves on device (advance
+is data-dependent), and rejected drafts ride the same ``(K, slots)`` error
+history as the attribution-only ``DRAFT_REJECT`` lane — visible to
+``fault_codes()``, masked out of the fault-raising word, never recovered.
+
 Recovery is the paper's use-case 1 applied to inference:
 
 * ``STATE_FAULT`` (bit-flipped recurrent state) or non-finite logits on slot
@@ -65,6 +78,7 @@ from ..launch.steps import (
     make_decode_window,
     make_prefill_decode_window,
     make_slot_decode_step,
+    make_speculative_decode_window,
 )
 from ..models import build_model
 from .metrics import ServeMetrics
@@ -98,7 +112,7 @@ def make_enum_fn(num_slots: int):
 
 
 @functools.lru_cache(maxsize=None)
-def make_window_enum_fn(num_slots: int):
+def make_window_enum_fn(num_slots: int, ignore: int = 0):
     """Jitted ``(history (K, S), mask (S,)) -> (combined, count, table, hist)``.
 
     The window variant of :func:`make_enum_fn`: free slots are masked out of
@@ -108,13 +122,21 @@ def make_window_enum_fn(num_slots: int):
     the two engines cannot diverge in attribution semantics. The masked
     history rides along so :meth:`DeviceFuture.fault_steps` can attribute a
     fault to its exact ``(step, slot)`` on the (rare) fault path only.
+
+    ``ignore`` strips attribution-only code bits (``DRAFT_REJECT``) from the
+    fold that feeds the combined word and the enumeration table — those lanes
+    stay in the returned history for exact (step, slot) attribution, but a
+    window whose only events are speculation misses must wait() clean, never
+    raise.
     """
     slot_enum = make_enum_fn(num_slots)
+    keep = jnp.uint32(~ignore & 0xFFFFFFFF)
 
     @jax.jit
     def enum(history, mask):
         hist = history.astype(WORD_DTYPE) * mask.astype(WORD_DTYPE)[None, :]
-        words = jax.lax.reduce(hist, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+        words = jax.lax.reduce(hist & keep, jnp.uint32(0),
+                               jax.lax.bitwise_or, (0,))
         combined, count, table = slot_enum(words, jnp.ones_like(mask))
         return combined, count, table, hist
 
@@ -140,6 +162,15 @@ class _WindowInFlight:
     req_ids: tuple
     valid: np.ndarray
     start: np.ndarray
+    # speculative windows only. ``start_row``: first committable verify row
+    # within the flip step ``start`` (prompt rows before it emit
+    # non-committable prompt-position argmaxes). ``rem0``: prompt tokens fed
+    # this window per lane (0 for decode lanes) — with the counts readback
+    # this yields exact drafted/accepted counters. ``deferred``: lanes masked
+    # out at dispatch (no valid state; their counts are garbage).
+    start_row: Optional[np.ndarray] = None
+    rem0: Optional[np.ndarray] = None
+    deferred: Optional[np.ndarray] = None
 
 
 class Replica:
@@ -162,7 +193,9 @@ class Replica:
                  prefill_budget: Optional[int] = None,
                  paged: bool = False, page_size: int = 8,
                  page_budget: Optional[int] = None, page_watermark: int = 0,
-                 paged_layout: Optional[PagedLayout] = None):
+                 paged_layout: Optional[PagedLayout] = None,
+                 speculate: bool = False, draft_len: int = 3,
+                 draft_layers: int = 1):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -175,6 +208,27 @@ class Replica:
         self.max_request_retries = max_request_retries
         self.window = int(window)
         self.overlap = bool(self.window) and bool(overlap)
+        # ---- speculative decode windows (speculate=True) ------------------
+        # draft-and-verify inside the fused window: up to draft_len+1 tokens
+        # per full-model step, token-bit-exact vs the plain engine; the
+        # commit loop consumes a per-(step, slot) accepted-count readback
+        # instead of assuming K tokens per window (DESIGN.md §3.4)
+        self.speculate = bool(speculate)
+        self.draft_len = int(draft_len)
+        self.draft_layers = int(draft_layers)
+        if self.speculate:
+            if not self.window:
+                raise ValueError("speculate=True requires window mode "
+                                 "(window=K)")
+            if not self.overlap:
+                raise ValueError("speculate=True requires overlap=True "
+                                 "(admission/LFLR must ride the window: the "
+                                 "blocking-prefill patch path assumes a "
+                                 "host-predictable position chain)")
+            if not self.model.supports_speculation():
+                raise ValueError(
+                    f"{cfg.name}: speculation requires a pure full-attention"
+                    ", non-MoE architecture")
         # ---- paged KV/state pool (paged=True, window mode only) -----------
         # full-attention caches become one shared page pool addressed through
         # a (slots, max_pages) table; the allocator owns the free list and
@@ -243,15 +297,26 @@ class Replica:
         self._step_count = 0
         # ---- zero-sync decode windows (window=K > 0) ----------------------
         if self.window:
-            self._decode_window = window_fn or (
-                make_prefill_decode_window(
+            if window_fn is not None:
+                self._decode_window = window_fn
+            elif self.speculate:
+                self._decode_window = make_speculative_decode_window(
+                    cfg, probe_cfg, window=self.window,
+                    draft_len=self.draft_len, draft_layers=self.draft_layers,
+                    donate=donate, paged=self.layout if self.paged else None)
+            elif self.overlap:
+                self._decode_window = make_prefill_decode_window(
                     cfg, probe_cfg, window=self.window, donate=donate,
                     paged=self.layout if self.paged else None)
-                if self.overlap else
-                make_decode_window(
+            else:
+                self._decode_window = make_decode_window(
                     cfg, probe_cfg, window=self.window, donate=donate,
-                    paged=self.layout if self.paged else None))
-            self._wenum = make_window_enum_fn(num_slots)
+                    paged=self.layout if self.paged else None)
+            # speculation misses (DRAFT_REJECT) are attribution-only: strip
+            # them from the fault-raising fold so they never reach wait()
+            self._ignore_codes = (int(ErrorCode.DRAFT_REJECT)
+                                  if self.speculate else 0)
+            self._wenum = make_window_enum_fn(num_slots, self._ignore_codes)
         if self.overlap or self.paged:
             # fresh per-sequence cache template + fused one-dispatch reset of
             # one lane's slice of the stacked caches — the overlapped
@@ -266,9 +331,16 @@ class Replica:
             self._reset = jax.jit(reset, donate_argnums=(0,))
         self._pending: Optional[_WindowInFlight] = None
         # device-resident feed for the next window (token chain never leaves
-        # the device) + host-tracked dispatch positions
+        # the device) + host-tracked dispatch positions. With speculation the
+        # per-window advance is data-dependent (1..K*(D+1) tokens), so the
+        # position chain ALSO lives on device (`_dev_pos_dev`, fed from window
+        # N's outputs into window N+1 without a host sync); `_dev_pos` then
+        # tracks the *retired* truth — updated from each window's accepted-
+        # count readback — and is only used for host planning (page growth).
         self._dev_tokens = jnp.zeros((num_slots, 1, 1), jnp.int32)
         self._dev_pos = np.zeros((num_slots,), np.int32)
+        self._dev_pos_dev = jnp.zeros((num_slots,), jnp.int32)
+        self._set_pos = jax.jit(lambda arr, slot, v: arr.at[slot].set(v))
 
     # ------------------------------------------------------------- page ledger
     def _can_admit(self, req: Request) -> bool:
@@ -374,15 +446,24 @@ class Replica:
             self._release_pages(slot)
             self.caches = self._reset(self.caches, self._fresh,
                                       jnp.int32(slot))
-            self._dev_pos[slot] = 0
+            self._set_dev_pos(slot, 0)
         if not self.layout.has_paged_leaves:
             return
         deferred = {slot for slot, cp in plan.items() if cp.rem == 0}
+        # speculation: a window advances a data-dependent 1..K*(D+1) tokens,
+        # and the in-flight window's advance is unknown until its counts come
+        # back — grow to the worst case (retired truth + in-flight horizon +
+        # this window's horizon). Conservative by design: demanding a page
+        # that goes unwritten wastes headroom; missing one latches PAGE_FAULT.
+        horizon = K * (self.draft_len + 1) if self.speculate else K
+        slack = (horizon if self.speculate and self._pending is not None
+                 else 0)
         new_ids: list[int] = []
         for s in list(sched.slots):
             if not s.active or s.idx in deferred:
                 continue
-            got = self._grow_slot(s.idx, int(self._dev_pos[s.idx]) + K)
+            got = self._grow_slot(s.idx,
+                                  int(self._dev_pos[s.idx]) + horizon + slack)
             if got:
                 new_ids.extend(got)
         if new_ids:
@@ -394,6 +475,17 @@ class Replica:
                           np.int32)
             ids[:len(new_ids)] = new_ids
             self.caches = self._scrub(self.caches, jnp.asarray(ids))
+
+    # ------------------------------------------------------------ dev position
+    def _set_dev_pos(self, slot: int, val: int) -> None:
+        """Patch one lane's dispatch position: the host mirror always; the
+        device-resident position chain too when speculating (it is the value
+        window N+1 actually consumes — the patch rides the device chain like
+        the cache reset it accompanies, never a sync)."""
+        self._dev_pos[slot] = val
+        if self.speculate:
+            self._dev_pos_dev = self._set_pos(self._dev_pos_dev,
+                                              jnp.int32(slot), jnp.int32(val))
 
     # ---------------------------------------------------------------- warmup
     def warmup(self, *, max_new: int = 8) -> None:
@@ -577,7 +669,10 @@ class Replica:
         self._step_count += 1
         sched = self.sched
         K = self.window
-        plan = sched.plan_prefill(K) if self.overlap else {}
+        # speculation: prompt feed rides the verify width, so one window can
+        # consume up to K*(D+1) prompt tokens per lane
+        chunk_width = (self.draft_len + 1) if self.speculate else 1
+        plan = (sched.plan_prefill(K * chunk_width) if self.overlap else {})
         if self.paged:
             # page maintenance first: lane restarts recycle their pages, every
             # writing lane gets growth pages, eviction preempts under pressure
@@ -585,9 +680,12 @@ class Replica:
             self._paged_prepare(plan)
         mask = sched.active_mask()
         start = np.zeros(sched.num_slots, np.int64)
+        start_row = np.zeros(sched.num_slots, np.int64)
+        rem0 = np.zeros(sched.num_slots, np.int64)
+        deferred = np.zeros(sched.num_slots, bool)
         extra = ((jnp.asarray(self.page_table),) if self.paged else ())
         if self.overlap:
-            chunk = np.zeros((K, sched.num_slots), np.int32)
+            chunk = np.zeros((K, chunk_width, sched.num_slots), np.int32)
             rem = np.zeros((sched.num_slots,), np.int32)
             for slot, cp in plan.items():
                 if not sched.slots[slot].active:
@@ -596,6 +694,7 @@ class Replica:
                     # deferred fresh lane: no valid state yet — fully masked
                     mask[slot] = 0
                     start[slot] = K
+                    deferred[slot] = True
                     continue
                 if cp.fresh and not self.paged:
                     # lane (re)start: fresh cache slice + position 0, both
@@ -604,31 +703,60 @@ class Replica:
                     # free/re-acquire/scrub that replaces the slab reset)
                     self.caches = self._reset(self.caches, self._fresh,
                                               jnp.int32(slot))
-                    self._dev_pos[slot] = 0
-                chunk[:cp.rem, slot] = cp.tokens
+                    self._set_dev_pos(slot, 0)
+                chunk.reshape(K * chunk_width,
+                              sched.num_slots)[:cp.rem, slot] = cp.tokens
                 rem[slot] = cp.rem
-                start[slot] = cp.rem - 1 if cp.exhausts else K
+                rem0[slot] = cp.rem
+                if cp.exhausts:
+                    # flip point: the argmax after the last prompt token is
+                    # the first committable token — step kf, verify row rf
+                    kf = (cp.rem - 1) // chunk_width
+                    start[slot] = kf
+                    start_row[slot] = (cp.rem - 1) - kf * chunk_width
+                else:
+                    start[slot] = K
                 self.metrics.record_chunk(cp.rem)
-            toks, words, next_tok, caches = self._decode_window(
-                self.params, self.caches, self._dev_tokens,
-                jnp.asarray(self._dev_pos), jnp.asarray(chunk),
-                jnp.asarray(rem), *extra)
+            if not self.speculate:
+                chunk = chunk[:, 0, :]          # plain engines feed 1/step
+            if self.speculate:
+                # device-resident position chain: the per-window advance is
+                # data-dependent, so window N+1 reads window N's next_pos
+                # without the host ever seeing it
+                toks, counts, words, next_tok, next_pos, caches = (
+                    self._decode_window(
+                        self.params, self.caches, self._dev_tokens,
+                        self._dev_pos_dev, jnp.asarray(chunk),
+                        jnp.asarray(rem), *extra))
+                self._dev_pos_dev = next_pos
+                outputs = (toks, counts)
+            else:
+                toks, words, next_tok, caches = self._decode_window(
+                    self.params, self.caches, self._dev_tokens,
+                    jnp.asarray(self._dev_pos), jnp.asarray(chunk),
+                    jnp.asarray(rem), *extra)
+                outputs = toks
         else:
             toks, words, next_tok, caches = self._decode_window(
                 self.params, self.caches, self._dev_tokens,
                 jnp.asarray(self._dev_pos), *extra)
+            outputs = toks
         # the device-side chain advances: window N+1 consumes these directly
         self.caches = caches
         self._dev_tokens = next_tok
-        self._dev_pos = self._dev_pos + K
+        if not self.speculate:
+            self._dev_pos = self._dev_pos + K
         combined, count, table, hist = self._wenum(words, jnp.asarray(mask))
-        fut = DeviceFuture(outputs=toks, word=combined, count=count,
+        fut = DeviceFuture(outputs=outputs, word=combined, count=count,
                            table=table, history=hist)
         return _WindowInFlight(
             fut=fut,
             req_ids=tuple(s.req.id if s.active else None for s in sched.slots),
             valid=np.ones(sched.num_slots, bool),
-            start=start)
+            start=start,
+            start_row=start_row if self.speculate else None,
+            rem0=rem0 if self.speculate else None,
+            deferred=deferred if self.speculate else None)
 
     def _retire_window(self, win: _WindowInFlight) -> list[Response]:
         if not win.fut.done():
@@ -636,20 +764,80 @@ class Replica:
             # the pipeline, not the host, is the bottleneck right now
             self.metrics.record_window_wait()
         try:
-            tok_block = win.fut.wait()
+            block = win.fut.wait()
         except PropagatedError as exc:
             return self._recover_window(win, exc)
-        toks = np.asarray(jax.device_get(tok_block))
+        if self.speculate:
+            toks, counts = (np.asarray(x) for x in jax.device_get(block))
+            self._note_advance(win, counts)
+            return self._commit_window(win, toks, counts=counts)
+        toks = np.asarray(jax.device_get(block))
         return self._commit_window(win, toks)
 
+    def _note_advance(self, win: _WindowInFlight, counts: np.ndarray,
+                      metric_limits: Optional[np.ndarray] = None) -> None:
+        """Fold a retired speculative window's accepted counts into the host
+        position mirror — the only place the host learns how far the device
+        chain actually advanced. Lanes that were patched mid-flight or have
+        changed owner are skipped: their device position was (or will be)
+        reset on the chain, and the mirror was reset with it. Also derives
+        the drafted/accepted speculation counters from the counts block:
+        step k of a lane with ``rem0`` prompt tokens force-feeds
+        ``f_k = max(clip(rem0 - k·(D+1), 0, D+1), 1)`` rows, drafts the
+        remaining ``D+1 - f_k``, and accepted drafts are whatever the counts
+        show beyond the forced rows. ``metric_limits`` (per-slot first
+        faulting step, from the fault path) caps the *counters* — steps at
+        and past a real fault ran on corrupted state, so their
+        accepts/rejects are noise that must not skew acceptance rates — while
+        the position mirror always folds the full window (the device chain
+        advanced through every step regardless)."""
+        D1 = self.draft_len + 1
+        K = self.window
+        drafted = accepted = 0
+        per_slot: dict[int, tuple[int, int]] = {}
+        for slot, rid in enumerate(win.req_ids):
+            if rid is None or not win.valid[slot] or win.deferred[slot]:
+                continue
+            s = self.sched.slots[slot]
+            if s.active and s.req.id == rid:
+                self._dev_pos[slot] += int(counts[:, slot].sum())
+            lim = K if metric_limits is None else int(metric_limits[slot])
+            rem = int(win.rem0[slot])
+            forced = np.maximum(np.clip(rem - np.arange(lim) * D1, 0, D1), 1)
+            d = int((D1 - forced).sum())
+            a = int(counts[:lim, slot].sum() - forced.sum())
+            if d > 0:
+                drafted += d
+                accepted += a
+                per_slot[slot] = (d, a)
+        if drafted:
+            self.metrics.record_spec(drafted, accepted, per_slot)
+
+    def _flat_block(self, win: _WindowInFlight, toks: np.ndarray,
+                    counts: np.ndarray, slot: int, lo: int,
+                    hi: int) -> list[int]:
+        """Flatten a speculative lane's committable tokens: window steps
+        ``lo .. hi-1``, each contributing its accepted rows — starting at the
+        lane's flip row in its flip step (earlier rows are prompt-position
+        argmaxes, fed not generated)."""
+        out = []
+        for k in range(lo, hi):
+            j0 = int(win.start_row[slot]) if k == lo else 0
+            out.extend(int(toks[k, slot, j])
+                       for j in range(j0, int(counts[k, slot])))
+        return out
+
     def _commit_window(self, win: _WindowInFlight, toks: np.ndarray,
-                       limits: Optional[np.ndarray] = None) -> list[Response]:
+                       limits: Optional[np.ndarray] = None,
+                       counts: Optional[np.ndarray] = None) -> list[Response]:
         """Commit each lane's token block from its first real step
         (``win.start`` — past any prompt-chunk feed) up to EOS / token budget /
-        its fault boundary (``limits``); trailing tokens are discarded. Lanes
-        whose request left the slot since dispatch (finished, expired,
-        re-routed) or whose state was patched mid-flight (``valid`` cleared)
-        are skipped."""
+        its fault boundary (``limits``, in window steps); trailing tokens are
+        discarded. Lanes whose request left the slot since dispatch (finished,
+        expired, re-routed) or whose state was patched mid-flight (``valid``
+        cleared) are skipped. With speculation (``counts`` given) a window
+        step contributes its variable accepted prefix instead of one token —
+        the variable-commit contract of DESIGN.md §3.4."""
         now = self.clock()
         K = self.window
         out: list[Response] = []
@@ -659,14 +847,26 @@ class Replica:
                 continue                         # lane was free at dispatch
             lo = int(win.start[slot])            # prompt-feed steps emit no
             s = self.sched.slots[slot]           # committable tokens
+            if counts is None:
+                emitted = K - lo
+            else:
+                # the flip step's leading prompt rows are fed, not generated
+                emitted = max(int(counts[lo:, slot].sum())
+                              - int(win.start_row[slot]), 0)
             if not s.active or s.req.id != rid or not win.valid[slot]:
-                discarded += K - lo
+                discarded += emitted
                 continue
             limit = K if limits is None else int(limits[slot])
-            k, done = (self.sched.commit_block(slot, toks[lo:limit, slot], now)
-                       if limit > lo else (0, None))
+            if limit <= lo:
+                block = []
+            elif counts is None:
+                block = toks[lo:limit, slot]
+            else:
+                block = self._flat_block(win, toks, counts, slot, lo, limit)
+            k, done = (self.sched.commit_block(slot, block, now)
+                       if len(block) else (0, None))
             committed += k
-            discarded += (K - lo) - k
+            discarded += emitted - k
             if done is not None:
                 out.append(done)
         self.metrics.record_window(committed, discarded, K)
@@ -687,9 +887,28 @@ class Replica:
         # fault (the window *computed* with the poisoned state even though the
         # state has since been repaired) — stale, already recovered: drop it
         faulted = [s for s in faulted if win.valid[s]]
-        toks = np.asarray(jax.device_get(win.fut.outputs))
+        if self.speculate:
+            toks, counts = (np.asarray(x)
+                            for x in jax.device_get(win.fut.outputs))
+        else:
+            toks = np.asarray(jax.device_get(win.fut.outputs))
+            counts = None
         if not faulted:
-            return self._commit_window(win, toks)
+            if self.speculate:
+                self._note_advance(win, counts)
+            return self._commit_window(win, toks, counts=counts)
+        # first *faulting* step per slot: attribution-only lanes (speculation
+        # misses) are masked out, so a rejected draft never truncates the
+        # clean committable prefix — and a real fault mid-speculation drops
+        # every token from its step on (no stale draft tokens commit)
+        steps = win.fut.fault_steps(ignore=getattr(self, "_ignore_codes", 0))
+        limits = np.full(num_slots, K, np.int64)
+        for slot in faulted:
+            limits[slot] = steps[slot] if steps is not None and steps[slot] >= 0 else 0
+        if self.speculate:
+            # counters capped at each lane's fault boundary: post-fault steps
+            # ran on corrupted state and must not skew acceptance rates
+            self._note_advance(win, counts, metric_limits=limits)
         decision = self.policy.decide(exc, self._step_count)
         self.metrics.record_fault(self._step_count, int(exc.combined_code),
                                   decision.action.value, tuple(faulted))
@@ -708,17 +927,13 @@ class Replica:
                 self.metrics.record_fault(self._step_count,
                                           int(ErrorCode.PAGE_FAULT),
                                           "page_reclaim", page_slots)
-        steps = win.fut.fault_steps()        # first faulting step per slot
-        limits = np.full(num_slots, K, np.int64)
-        for slot in faulted:
-            limits[slot] = steps[slot] if steps is not None and steps[slot] >= 0 else 0
         if decision.action is Action.ROLLBACK:
             targets, fail_now = list(self.sched.active_slots()), False
         elif decision.action is Action.ABORT:
             targets, fail_now = faulted, True
         else:   # SKIP_BATCH / RESTORE_GOOD / CONTINUE / ... → per-sequence LFLR
             targets, fail_now = faulted, False
-        out = self._commit_window(win, toks, limits=limits)
+        out = self._commit_window(win, toks, limits=limits, counts=counts)
         faulted_set = set(faulted)
         for slot in targets:
             s = self.sched.slots[slot]

@@ -417,6 +417,14 @@ class ContinuousBatchingScheduler:
         request finishes (EOS / token budget); returns ``(consumed, response)``
         where ``response`` is non-None iff the lane finished mid-block —
         everything after that boundary is discarded by the caller.
+
+        ``tokens`` is a *variable-length* sequence by contract: the plain
+        window engine hands K tokens, the speculative engine hands each
+        lane's flattened accepted prefixes (1 to K·(D+1) tokens, pre-cut at
+        the lane's fault boundary) — EOS and the token budget are checked
+        token-by-token either way, so a request that ends *inside* an
+        accepted draft run finishes at exactly the same token as the plain
+        engine and the trailing accepts are discarded.
         """
         now = self.clock() if now is None else now
         limit = len(tokens) if limit is None else min(limit, len(tokens))

@@ -101,3 +101,31 @@ def test_constructor_validation():
         PageAllocator(4, 4, watermark=-1)
     with pytest.raises(ValueError):
         PageAllocator(4, 4).alloc(0, -1)
+
+
+def test_multi_page_growth_spans_watermark_boundary():
+    """One alloc call growing a lane by several pages — the `[pos, pos+K+D)`
+    growth path the speculative window exercises — may dip INTO the watermark
+    headroom: the watermark gates *admission* of new sequences only, never the
+    growth of lanes already serving (a grown lane must not deadlock against
+    its own headroom). Ledger arithmetic must stay exact across the boundary
+    and can_admit must flip to refusing exactly when the headroom is gone."""
+    a = PageAllocator(8, 4, watermark=2)
+    a.alloc(0, 3)                        # free = 5, admission headroom left
+    assert a.can_admit(8)                # 2 <= 5 - 2
+    # single-call growth of 4 pages: crosses free=watermark (5 -> 1 < 2)
+    got = a.alloc(0, 4)
+    assert len(got) == 4 and a.free_pages == 1
+    assert a.owned(0)[-4:] == tuple(got)  # logical page order kept
+    a.check()
+    # admission now refused (1 free - 2 watermark < anything)...
+    assert not a.can_admit(4)
+    # ...but in-flight growth still succeeds down to the last page
+    a.alloc(1, 1)
+    assert a.free_pages == 0
+    a.check()
+    # and exhaustion past that still raises without partial effect
+    with pytest.raises(PagePoolExhausted):
+        a.alloc(0, 1)
+    assert a.free_pages == 0
+    a.check()
