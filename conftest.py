@@ -6,3 +6,31 @@ import sys
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+
+def count_syncs(monkeypatch, fn):
+    """Run ``fn`` with jax.device_get / jax.block_until_ready instrumented;
+    returns (number of host syncs, fn's result). Shared by the host-sync-
+    budget tests (window / overlap / speculative suites) so the counting
+    methodology cannot silently diverge between them."""
+    import jax
+
+    counts = {"n": 0}
+    real_get, real_block = jax.device_get, jax.block_until_ready
+
+    def counting_get(x):
+        counts["n"] += 1
+        return real_get(x)
+
+    def counting_block(x):
+        counts["n"] += 1
+        return real_block(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    monkeypatch.setattr(jax, "block_until_ready", counting_block)
+    try:
+        result = fn()
+    finally:
+        monkeypatch.setattr(jax, "device_get", real_get)
+        monkeypatch.setattr(jax, "block_until_ready", real_block)
+    return counts["n"], result

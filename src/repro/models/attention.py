@@ -414,7 +414,17 @@ def attention_decode(p, x, cache, pos, cfg, *, window: int = 0,
                         kr.astype(jnp.float32)) / jnp.sqrt(float(hd))
     scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
-    out = _attn_out(probs, vr, p["wo"], x.dtype)
+    if window:
+        # sliding-window layers can never be speculatively verified (ring
+        # over-writes are destructive), so there is no multi-row pass to stay
+        # bit-equal with — keep the original contractions, which avoid
+        # _attn_out's extra transpose/reshape ops on this hot path
+        out = jnp.einsum("bhst,bthd->bshd", probs, vr.astype(jnp.float32))
+        out = jnp.einsum("bshe,hed->bsd", out.astype(x.dtype), p["wo"])
+    else:
+        # full attention: must stay bitwise-equal to attention_verify's
+        # multi-row pass, so both share the row-count-invariant forms
+        out = _attn_out(probs, vr, p["wo"], x.dtype)
     return out, {"k": k, "v": v}
 
 

@@ -179,9 +179,11 @@ class ServeMetrics:
             return self.decode_tokens / (self._t_last - self._t0)
 
     def tokens_per_step(self) -> float:
-        """Committed tokens per decode step (window steps count K). The
-        speculation headline: > 1 means draft-and-verify emits more than one
-        token per full-model forward."""
+        """Committed tokens per *dispatched* decode step (a window counts K
+        steps; each step serves every slot, so multi-slot batching alone
+        yields up to ``num_slots``). The speculation headline is therefore a
+        same-slot-count comparison: draft-and-verify lifts this ratio above
+        the plain engine's on identical traffic."""
         with self._lock:
             if not self.decode_steps:
                 return 0.0

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import count_syncs
+
 from repro.configs import smoke_config
 from repro.core.device_channel import DeviceFuture
 from repro.launch.steps import (
@@ -199,28 +201,6 @@ def test_deadline_expiry_mid_prefill_lane(env):
 
 
 # ------------------------------------------------------------ host-sync budget
-def _count_syncs(monkeypatch, fn):
-    counts = {"n": 0}
-    real_get, real_block = jax.device_get, jax.block_until_ready
-
-    def counting_get(x):
-        counts["n"] += 1
-        return real_get(x)
-
-    def counting_block(x):
-        counts["n"] += 1
-        return real_block(x)
-
-    monkeypatch.setattr(jax, "device_get", counting_get)
-    monkeypatch.setattr(jax, "block_until_ready", counting_block)
-    try:
-        result = fn()
-    finally:
-        monkeypatch.setattr(jax, "device_get", real_get)
-        monkeypatch.setattr(jax, "block_until_ready", real_block)
-    return counts["n"], result
-
-
 def test_host_sync_budget_with_lane_active(env, monkeypatch):
     """Host syncs stay O(steps / K) *while lanes are prefilling*: admission
     and recovery cost zero syncs and zero stalls on the overlapped engine,
@@ -233,8 +213,8 @@ def test_host_sync_budget_with_lane_active(env, monkeypatch):
         return rep, _serve_all(rep, reqs())
 
     run(True), run(False)       # warm both engines' compiles
-    syncs_over, (rep_o, out_o) = _count_syncs(monkeypatch, lambda: run(True))
-    syncs_block, (rep_b, out_b) = _count_syncs(monkeypatch, lambda: run(False))
+    syncs_over, (rep_o, out_o) = count_syncs(monkeypatch, lambda: run(True))
+    syncs_block, (rep_b, out_b) = count_syncs(monkeypatch, lambda: run(False))
     assert all(r.status == OK for r in out_o.values())
     for i in out_b:
         assert out_o[i].tokens == out_b[i].tokens

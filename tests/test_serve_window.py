@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import count_syncs
+
 from repro.configs import smoke_config
 from repro.core.errors import ErrorCode
 from repro.launch.steps import PerfOptions, make_cache_prefill
@@ -194,28 +196,6 @@ def test_budget_finish_midwindow_discards_trailing(env):
 
 
 # ---------------------------------------------------------- host-sync budget
-def _count_syncs(monkeypatch, fn):
-    counts = {"n": 0}
-    real_get, real_block = jax.device_get, jax.block_until_ready
-
-    def counting_get(x):
-        counts["n"] += 1
-        return real_get(x)
-
-    def counting_block(x):
-        counts["n"] += 1
-        return real_block(x)
-
-    monkeypatch.setattr(jax, "device_get", counting_get)
-    monkeypatch.setattr(jax, "block_until_ready", counting_block)
-    try:
-        result = fn()
-    finally:
-        monkeypatch.setattr(jax, "device_get", real_get)
-        monkeypatch.setattr(jax, "block_until_ready", real_block)
-    return counts["n"], result
-
-
 def test_host_sync_budget_scales_with_steps_over_K(env, monkeypatch):
     """Regression fence for the zero-sync contract: a serve run's host syncs
     must scale with ``steps / K`` (+ one-off prefills), not with ``steps`` —
@@ -230,7 +210,7 @@ def test_host_sync_budget_scales_with_steps_over_K(env, monkeypatch):
     run(8), run(4), run(0)
     syncs = {}
     for K in (0, 4, 8):
-        syncs[K], (rep, out) = _count_syncs(monkeypatch, lambda: run(K))
+        syncs[K], (rep, out) = count_syncs(monkeypatch, lambda: run(K))
         assert all(r.status == OK for r in out.values())
         if K:
             m = rep.metrics
