@@ -23,6 +23,12 @@ replicas serves a request stream; we kill one replica mid-flight. Survivors'
 next health exchange raises (ULFM revoke → agree), they shrink 3 → 2 and
 re-route the dead replica's unanswered requests — every accepted request is
 answered, nothing deadlocks, nothing aborts.
+
+Both acts run with fault-causality tracing on (``repro.obs``, DESIGN §3.5):
+every request's life is a span chain, every fault event carries the exact
+device error word, and the merged group trace — kill → shrink → re-route
+included — is dumped to ``serve-trace.json`` (open it in Perfetto, or run
+``python scripts/trace_tool.py serve-trace.json``) and pretty-printed here.
 """
 import sys
 
@@ -30,12 +36,22 @@ sys.path.insert(0, "src")
 
 from repro.configs import smoke_config  # noqa: E402
 from repro.core.faults import FaultSchedule, FaultSpec  # noqa: E402
+from repro.obs import (  # noqa: E402
+    Tracer,
+    dump_trace,
+    format_fault_report,
+    format_timeline,
+    group_chains,
+    merge_traces,
+    validate,
+)
 from repro.serve import Replica, Request, ServeGroup  # noqa: E402
 
 
 def act1_soft_fault(cfg):
     print("=== Act 1: decode windows + per-sequence LFLR on one replica ===")
-    replica = Replica(cfg, num_slots=4, max_len=48, window=4)
+    tracer = Tracer()
+    replica = Replica(cfg, num_slots=4, max_len=48, window=4, tracer=tracer)
     for i in range(6):      # 6 requests onto 4 slots: backfill is exercised
         rej = replica.submit(Request(id=i, prompt=(11 + i, 22 + i, 33 + i),
                                      max_new_tokens=12))
@@ -61,12 +77,25 @@ def act1_soft_fault(cfg):
           f"{s['host_stalls']} blocking prefills, "
           f"TTFT p50 {s['ttft_p50_s'] * 1e3:.0f} ms")
     assert s["host_stalls"] == 0, "overlapped engine must never block"
+    # the post-mortem view of the same run: the fault event carries the exact
+    # device error word, joined to the recovery lane that resolved it
+    trace = merge_traces(tracer)
+    problems = validate(trace)
+    assert not problems, problems
+    print("  fault causality (repro.obs):")
+    for line in format_fault_report(trace).splitlines():
+        print(f"  {line}")
+    faulted = [r for r in responses if r.retries]
+    if faulted:
+        print("  timeline of the faulted request:")
+        for line in format_timeline(trace, faulted[0].trace_id).splitlines():
+            print(f"  {line}")
     print()
 
 
 def act2_hard_fault(cfg):
     print("=== Act 2: replica kill -> shrink + re-route on a ServeGroup ===")
-    group = ServeGroup(cfg, 3, num_slots=2, max_len=48)
+    group = ServeGroup(cfg, 3, num_slots=2, max_len=48, trace=True)
     requests = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=6)
                 for i in range(9)]
     result = group.serve(requests, faults=FaultSchedule(
@@ -86,6 +115,28 @@ def act2_hard_fault(cfg):
     assert all(r.ok for r in result.responses.values())
     print("  all accepted requests answered despite the kill — no deadlock, "
           "no abort")
+    # the merged trace stitches all three ranks — the dead one included —
+    # into one causal object: kill -> ulfm shrink -> ledger re-route ->
+    # terminal answers on the survivors
+    trace = dump_trace("serve-trace.json", *(result.tracers[r]
+                                             for r in sorted(result.tracers)))
+    problems = validate(trace)
+    assert not problems, problems
+    n = len(trace["traceEvents"])
+    print(f"  trace: {n} events from 3 replicas -> serve-trace.json "
+          "(perfetto/chrome://tracing, or scripts/trace_tool.py)")
+    for c in group_chains(trace):
+        routed = ", ".join(
+            f"req {(r.get('args') or {}).get('request')}"
+            f"->r{(r.get('args') or {}).get('to_rank')}"
+            for r in c["reroutes"])
+        print(f"  chain: replica {c['dead_rank']} killed -> shrink seen by "
+              f"{sorted({s['pid'] for s in c['shrinks']})} -> [{routed}]")
+    summary = result.summary()
+    print(f"  fleet summary (merged): {summary['requests']} requests, "
+          f"{summary['replicas']} replicas ({summary['survivors']} "
+          f"survivors), {summary['rerouted']} re-routed, "
+          f"p99 latency {summary['latency_p99_s'] * 1e3:.0f} ms")
 
 
 def main():

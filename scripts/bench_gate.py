@@ -48,6 +48,13 @@ def _cells(record: dict):
         if isinstance(paged.get("slot_capacity_ratio"), (int, float)):
             out["paged_capacity/slot_ratio"] = float(
                 paged["slot_capacity_ratio"])
+    tracer = record.get("tracer")
+    if isinstance(tracer, dict):
+        for side in ("noop", "enabled"):
+            cell = tracer.get(side)
+            if isinstance(cell, dict) and isinstance(
+                    cell.get("tokens_per_s"), (int, float)):
+                out[f"tracer/{side}"] = float(cell["tokens_per_s"])
     return out
 
 

@@ -84,6 +84,15 @@ stage "overlap smoke" run_bench_smoke --overlap
 echo "== paged smoke: benchmarks.serving --smoke --paged =="
 stage "paged smoke" run_bench_smoke --paged
 
+# trace smoke writes trace-smoke.json; the post-mortem CLI then re-validates
+# it from disk — the artifact CI uploads is the one that passed the check
+run_trace_smoke() {
+    run_bench_smoke --trace \
+        && python scripts/trace_tool.py trace-smoke.json --check
+}
+echo "== trace smoke: benchmarks.serving --smoke --trace + trace_tool =="
+stage "trace smoke" run_trace_smoke
+
 echo "== bench-regression gate: scripts/bench_gate.py =="
 stage "bench gate" python scripts/bench_gate.py
 

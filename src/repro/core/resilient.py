@@ -47,6 +47,9 @@ class Event:
     code: int = 0
     action: Optional[str] = None
     duration_s: float = 0.0
+    t: float = 0.0             # wall clock (monotonic) the event was recorded
+                               # at — spans end here and start duration_s
+                               # earlier. 0.0 = legacy unstamped event.
 
 
 @dataclass
@@ -117,7 +120,8 @@ class ResilientExecutor:
                 self._watchdog(step, dt)
                 state = new_state
                 consecutive_failures = 0
-                self.log.add(Event(step, "ok", duration_s=dt))
+                self.log.add(Event(step, "ok", duration_s=dt,
+                                   t=time.monotonic()))
                 # refresh known-good snapshot / durable checkpoint
                 if (step - good_step) >= self.config.good_state_interval:
                     good, good_step = snapshot(state), step
@@ -125,19 +129,21 @@ class ResilientExecutor:
                         and step % self.config.checkpoint_interval == 0
                         and step > start_step):
                     self.checkpointer.save(step, state)
-                    self.log.add(Event(step, "checkpoint"))
+                    self.log.add(Event(step, "checkpoint",
+                                       t=time.monotonic()))
             except ReproError as exc:
                 dt = time.monotonic() - t0
                 consecutive_failures += 1
                 if consecutive_failures > self.config.max_consecutive_failures:
                     self.log.add(Event(step, "fault", detail="abort: too many",
-                                       action=Action.ABORT.value, duration_s=dt))
+                                       action=Action.ABORT.value,
+                                       duration_s=dt, t=time.monotonic()))
                     raise
                 decision = self.policy.decide(exc, step)
                 code = int(getattr(exc, "combined_code", ErrorCode.COMM_CORRUPTED))
                 self.log.add(Event(step, "fault", detail=decision.reason,
                                    code=code, action=decision.action.value,
-                                   duration_s=dt))
+                                   duration_s=dt, t=time.monotonic()))
                 state, good, good_step = self._apply(
                     decision, exc, state, good, good_step, step)
             step += 1
@@ -168,7 +174,8 @@ class ResilientExecutor:
             if self.on_shrink is None:
                 raise exc
             state = self.on_shrink(exc, state)
-            self.log.add(Event(step, "shrink", detail="elastic re-mesh"))
+            self.log.add(Event(step, "shrink", detail="elastic re-mesh",
+                               t=time.monotonic()))
             return state, snapshot(state), step
         raise exc  # ABORT
 
@@ -187,7 +194,8 @@ class ResilientExecutor:
         if warmed and dt > cfg.straggler_factor * self._ema_step_time:
             self.log.add(Event(step, "straggler",
                                detail=f"{dt:.3f}s vs ema {self._ema_step_time:.3f}s",
-                               code=int(ErrorCode.STRAGGLER)))
+                               code=int(ErrorCode.STRAGGLER),
+                               t=time.monotonic()))
         # EMA update after detection, robust to the straggler itself
         self._ema_step_time = 0.9 * self._ema_step_time + 0.1 * min(
             dt, 4.0 * self._ema_step_time)

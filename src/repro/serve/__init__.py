@@ -20,6 +20,11 @@ exceptions* at a wait, never deadlocks or aborts — to inference traffic.
   re-routes its in-flight requests.
 * :class:`ServeMetrics` — latency percentiles, tokens/s, fault counters, and
   an ``EventLog`` export matching the training executor's records.
+* Tracing (``repro.obs``) — pass ``tracer=Tracer(...)`` to a replica (or
+  ``trace=True`` to a :class:`ServeGroup`) and every request's life becomes a
+  causal span chain: submit → slot → prefill chunks → decode windows →
+  (faults → recovery lanes →) terminal response, exported as Perfetto
+  ``trace_event`` JSON (DESIGN §3.5).
 """
 from .group import GroupResult, RankReport, ServeGroup  # noqa: F401
 from .metrics import FaultRecord, ServeMetrics  # noqa: F401

@@ -44,6 +44,7 @@ from ..launch.steps import (
     make_speculative_decode_window,
 )
 from ..models import build_model
+from ..obs.trace import NULL_TRACER, Tracer, merge_traces
 from .metrics import ServeMetrics
 from .queue import AdmissionPolicy, Request, RequestQueue, Response
 from .replica import SERVE_PROBES, Replica
@@ -112,8 +113,8 @@ class _Ledger:
                     # kept, so latency still spans the recovery)
                     req.retries = 0
                     self.pending[new].append(req)
-                    moved.append(rid)
-            self.rerouted.extend(moved)
+                    moved.append((rid, owner, new))
+            self.rerouted.extend(rid for rid, _, _ in moved)
             return moved
 
 
@@ -130,6 +131,7 @@ class GroupResult:
     responses: dict[int, Response]
     reports: list[RankResult]                    # raw per-rank harness results
     rerouted: tuple[int, ...] = ()
+    tracers: dict[int, Tracer] = field(default_factory=dict)
 
     @property
     def ok(self) -> dict[int, Response]:
@@ -138,6 +140,30 @@ class GroupResult:
     def report(self, rank: int) -> Optional[RankReport]:
         rr = self.reports[rank]
         return rr.value if rr.exception is None and not rr.killed else None
+
+    def merged_metrics(self) -> ServeMetrics:
+        """Survivor replicas' metrics pooled into one accumulator (sums,
+        max-of-peaks, pooled response populations for percentiles)."""
+        parts = [rr.value.metrics for rr in self.reports
+                 if rr.exception is None and not rr.killed
+                 and rr.value is not None and rr.value.metrics is not None]
+        return ServeMetrics.merged(parts)
+
+    def summary(self) -> dict:
+        """One fleet-level dict: the merged per-replica metrics plus the
+        group's own story (replica count, survivors, re-routes)."""
+        out = self.merged_metrics().summary()
+        out["replicas"] = len(self.reports)
+        out["survivors"] = sum(1 for rr in self.reports
+                               if rr.exception is None and not rr.killed)
+        out["rerouted"] = len(self.rerouted)
+        return out
+
+    def trace(self) -> dict:
+        """All ranks' tracers (dead ones included — their spans are the cause
+        half of the kill → shrink → re-route chain) merged into one
+        trace_event object."""
+        return merge_traces(*(self.tracers[r] for r in sorted(self.tracers)))
 
 
 class ServeGroup:
@@ -153,7 +179,8 @@ class ServeGroup:
                  page_budget: Optional[int] = None,
                  page_watermark: int = 0,
                  speculate: bool = False, draft_len: int = 3,
-                 draft_layers: int = 1):
+                 draft_layers: int = 1,
+                 trace: bool = False, trace_sample: float = 1.0):
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
         if paged and not window:
@@ -179,6 +206,8 @@ class ServeGroup:
         self.speculate = bool(speculate)
         self.draft_len = int(draft_len)
         self.draft_layers = int(draft_layers)
+        self.trace = bool(trace)
+        self.trace_sample = float(trace_sample)
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
         # — each paged replica owns its own pool + table, but the layout (and
@@ -233,11 +262,21 @@ class ServeGroup:
                     if self.paged and self._layout.has_paged_leaves
                     else self.max_len)
 
+        tracers: dict[int, Tracer] = {}
+
         def rank_fn(ctx):
             inst = initialize(ctx, default_timeout=self.timeout)
             comm = inst.comm_world()
+            if self.trace:
+                tracer = Tracer(pid=ctx.rank, sample=self.trace_sample)
+                # registered up front so a killed rank's spans survive it —
+                # they are the *cause* half of the kill → shrink → re-route
+                # chain the merged trace must show
+                tracers[ctx.rank] = tracer
+            else:
+                tracer = NULL_TRACER
             queue = RequestQueue(AdmissionPolicy(
-                max_queue=10_000, max_total_len=pool_cap))
+                max_queue=10_000, max_total_len=pool_cap), tracer=tracer)
             replica = Replica(
                 self.cfg, params=self.params, num_slots=self.num_slots,
                 max_len=self.max_len, queue=queue, rank=ctx.rank,
@@ -256,6 +295,9 @@ class ServeGroup:
             for round_i in range(max_rounds):
                 for spec in faults.at(round_i, ctx.rank):
                     if spec.kind == "kill":
+                        if tracer.enabled:
+                            tracer.instant("replica_kill", "group",
+                                           rank=ctx.rank, round=round_i)
                         ctx.die()                       # never returns
                     elif spec.kind == "state_nan":
                         slot = replica.inject_state_fault()
@@ -283,9 +325,19 @@ class ServeGroup:
                     comm.shrink_to_survivors()
                     survivors = list(comm.context.members)
                     moved = ledger.on_shrink(survivors)
+                    if tracer.enabled:
+                        tracer.instant("ulfm_shrink", "group", rank=ctx.rank,
+                                       round=round_i,
+                                       survivors=sorted(survivors))
+                        for rid, old, new in moved:
+                            tracer.instant(
+                                "reroute", "group",
+                                trace_id=ledger.requests[rid].trace_id,
+                                request=rid, from_rank=old, to_rank=new)
                     report.events.append(("shrink", round_i, len(survivors)))
                     if moved:
-                        report.events.append(("reroute", round_i, moved))
+                        report.events.append(
+                            ("reroute", round_i, [r for r, _, _ in moved]))
                     continue
             else:
                 raise RuntimeError(
@@ -296,4 +348,4 @@ class ServeGroup:
         results = run_ranks(self.nranks, rank_fn, ulfm=True,
                             join_timeout=self.timeout * 4)
         return GroupResult(responses=dict(ledger.responses), reports=results,
-                           rerouted=tuple(ledger.rerouted))
+                           rerouted=tuple(ledger.rerouted), tracers=tracers)

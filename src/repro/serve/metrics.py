@@ -23,6 +23,7 @@ class FaultRecord:
     code: int
     action: str
     slots: tuple[int, ...] = ()
+    t: float = 0.0               # wall clock (metrics clock) of detection
 
 
 class ServeMetrics:
@@ -32,6 +33,10 @@ class ServeMetrics:
         self._lock = threading.Lock()
         self.clock = clock
         self.responses: list[Response] = []
+        self._resp_t: list[float] = []       # completion wall time per response
+                                             # (Response is frozen and carries
+                                             # only the latency, so the stamp
+                                             # lives here, index-aligned)
         self.faults: list[FaultRecord] = []
         self.decode_steps = 0
         self.prefills = 0
@@ -145,11 +150,13 @@ class ServeMetrics:
     def record_response(self, resp: Response) -> None:
         with self._lock:
             self.responses.append(resp)
+            self._resp_t.append(self.clock())
 
     def record_fault(self, step: int, code: int | ErrorCode, action: str,
                      slots: tuple[int, ...] = ()) -> None:
         with self._lock:
-            self.faults.append(FaultRecord(step, int(code), action, slots))
+            self.faults.append(FaultRecord(step, int(code), action, slots,
+                                           t=self.clock()))
 
     # --------------------------------------------------------------- queries
     def by_status(self) -> dict[str, int]:
@@ -260,15 +267,73 @@ class ServeMetrics:
     # --------------------------------------------------------------- export
     def to_event_log(self) -> EventLog:
         """EventLog-style record: requests as ok/fault events, faults with the
-        recovery action taken — same shape the training executor emits."""
+        recovery action taken — same shape the training executor emits.
+
+        Every event carries its real wall-clock stamp ``t`` (the metrics
+        clock): a fault's detection time, a response's completion time (its
+        span starts ``latency_s`` earlier, at the request's arrival). The
+        merged log is emitted in wall order so interleaving several logs —
+        training + serving, or one per replica — sorts causally; a request's
+        ``step`` is its dispatch position, the engine step a fault names."""
         log = EventLog()
         with self._lock:
-            for f in self.faults:
-                log.add(Event(step=f.step, kind="fault", code=f.code,
-                              action=f.action,
-                              detail=f"slots={list(f.slots)}"))
-            for i, r in enumerate(self.responses):
-                log.add(Event(step=i, kind="ok" if r.status == OK else "fault",
-                              detail=f"request {r.id}: {r.status}",
-                              duration_s=r.latency_s))
+            entries = [(f.t, Event(step=f.step, kind="fault", code=f.code,
+                                   action=f.action,
+                                   detail=f"slots={list(f.slots)}", t=f.t))
+                       for f in self.faults]
+            resp_order = sorted(zip(self._resp_t, self.responses),
+                                key=lambda p: p[0])
+            entries += [(t, Event(step=i,
+                                  kind="ok" if r.status == OK else "fault",
+                                  detail=f"request {r.id}: {r.status}",
+                                  duration_s=r.latency_s, t=t))
+                        for i, (t, r) in enumerate(resp_order)]
+        for _, ev in sorted(entries, key=lambda p: p[0]):
+            log.add(ev)
         return log
+
+    # ---------------------------------------------------------------- merging
+    @classmethod
+    def merged(cls, parts: "list[ServeMetrics]") -> "ServeMetrics":
+        """One accumulator equivalent to the union of ``parts`` (e.g. a
+        ServeGroup's per-replica metrics): counters sum, peaks take the max,
+        responses and faults pool (so percentiles are computed over the whole
+        fleet's population, not averaged per replica), and the wall window
+        spans min ``t0`` to max ``t_last`` — fleet tokens/s is total tokens
+        over the fleet's wall span, replicas being concurrent."""
+        out = cls()
+        for m in parts:
+            with m._lock:
+                out.responses.extend(m.responses)
+                out._resp_t.extend(m._resp_t)
+                out.faults.extend(m.faults)
+                out.decode_steps += m.decode_steps
+                out.prefills += m.prefills
+                out.decode_tokens += m.decode_tokens
+                out.windows += m.windows
+                out.discarded_tokens += m.discarded_tokens
+                out.prefill_chunks += m.prefill_chunks
+                out.prefill_chunk_tokens += m.prefill_chunk_tokens
+                out.host_stalls += m.host_stalls
+                out.host_stall_s += m.host_stall_s
+                out.window_waits += m.window_waits
+                out.pages_allocated += m.pages_allocated
+                out.pages_freed += m.pages_freed
+                out.page_evictions += m.page_evictions
+                out.peak_pages_in_use = max(out.peak_pages_in_use,
+                                            m.peak_pages_in_use)
+                out.peak_active_slots = max(out.peak_active_slots,
+                                            m.peak_active_slots)
+                out.draft_tokens += m.draft_tokens
+                out.accepted_draft_tokens += m.accepted_draft_tokens
+                for slot, (d, a) in m._spec_per_slot.items():
+                    cell = out._spec_per_slot.setdefault(slot, [0, 0])
+                    cell[0] += d
+                    cell[1] += a
+                if m._t0 is not None:
+                    out._t0 = (m._t0 if out._t0 is None
+                               else min(out._t0, m._t0))
+                if m._t_last is not None:
+                    out._t_last = (m._t_last if out._t_last is None
+                                   else max(out._t_last, m._t_last))
+        return out

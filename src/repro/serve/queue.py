@@ -23,6 +23,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional
 
+from ..obs.trace import NULL_TRACER, Tracer
+
 # Terminal request statuses.
 OK = "ok"
 REJECTED = "rejected"
@@ -40,6 +42,10 @@ class Request:
     deadline: Optional[float] = None     # absolute, in the queue's clock domain
     arrival_t: Optional[float] = None    # stamped once by RequestQueue.submit
     retries: int = 0                     # LFLR recomputes consumed so far
+    trace_id: Optional[int] = None       # stamped once by RequestQueue.submit
+                                         # (None = untraced / sampled out);
+                                         # survives re-routes and requeues so
+                                         # post-mortems see one causal chain
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -65,6 +71,7 @@ class Response:
     retries: int = 0                     # faults recovered while serving it
     replica: Optional[int] = None        # rank that answered it
     detail: str = ""
+    trace_id: Optional[int] = None       # the request's trace id, if traced
 
     @property
     def ok(self) -> bool:
@@ -96,9 +103,11 @@ class RequestQueue:
     """
 
     def __init__(self, policy: AdmissionPolicy | None = None, *,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer: Tracer | None = None):
         self.policy = policy or AdmissionPolicy()
         self.clock = clock
+        self.tracer = tracer or NULL_TRACER
         self._lock = threading.Lock()
         self._heap: list[tuple[float, int, Request]] = []
         self._seq = itertools.count()
@@ -114,15 +123,27 @@ class RequestQueue:
         with self._lock:
             reason = self.policy.reject_reason(req, len(self._heap))
             if reason is not None:
+                if self.tracer.enabled:
+                    self.tracer.instant("reject", "request", ts=now,
+                                        request_id=req.id, reason=reason)
                 return Response(id=req.id, status=REJECTED, detail=reason)
-            if req.arrival_t is None:
+            stamp = req.arrival_t is None
+            if stamp:
                 # stamp once: a request re-routed after a replica kill keeps
                 # its original acceptance time, so latency/TTFT include the
-                # whole fault-recovery delay
+                # whole fault-recovery delay — and its trace id, so the
+                # post-mortem stitches both replicas into one causal chain
                 req.arrival_t = now
             key = req.deadline if req.deadline is not None else float("inf")
             heapq.heappush(self._heap, (key, next(self._seq), req))
-            return None
+        if stamp and self.tracer.enabled and req.trace_id is None:
+            req.trace_id = self.tracer.start_request(req, now)
+        elif not stamp and self.tracer.enabled and req.trace_id is not None:
+            # re-submission of an already-accepted request (ledger re-route
+            # after a kill): a causal hop, not a new request
+            self.tracer.instant("resubmit", "request", ts=now,
+                                trace_id=req.trace_id)
+        return None
 
     def requeue(self, req: Request) -> None:
         """Put an *already accepted* request back in the queue, ahead of its
@@ -137,6 +158,8 @@ class RequestQueue:
         pressure.
         """
         assert req.arrival_t is not None, "requeue is for accepted requests"
+        if self.tracer.enabled and req.trace_id is not None:
+            self.tracer.instant("requeue", "sched", trace_id=req.trace_id)
         with self._lock:
             key = req.deadline if req.deadline is not None else float("inf")
             heapq.heappush(self._heap, (key, next(self._rseq), req))

@@ -81,6 +81,7 @@ from ..launch.steps import (
     make_speculative_decode_window,
 )
 from ..models import build_model
+from ..obs.trace import NULL_TRACER, Tracer
 from .metrics import ServeMetrics
 from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
 from .scheduler import ContinuousBatchingScheduler, PageAllocator, PagePoolExhausted
@@ -171,6 +172,16 @@ class _WindowInFlight:
     start_row: Optional[np.ndarray] = None
     rem0: Optional[np.ndarray] = None
     deferred: Optional[np.ndarray] = None
+    # tracing only: dispatch wall time + the window's index (_step_count at
+    # dispatch), so the retire-side span covers the window's whole in-flight
+    # life and fault events name the exact window they latched in.
+    # ``trace_ids`` snapshots the lane owners' trace ids at dispatch (empty
+    # when tracing is off): a fault must be attributed to the request whose
+    # state the window actually computed with, even if that request finished
+    # and left the slot before the deferred detection surfaced it.
+    t_dispatch: float = 0.0
+    index: int = 0
+    trace_ids: tuple = ()
 
 
 class Replica:
@@ -195,7 +206,8 @@ class Replica:
                  page_budget: Optional[int] = None, page_watermark: int = 0,
                  paged_layout: Optional[PagedLayout] = None,
                  speculate: bool = False, draft_len: int = 3,
-                 draft_layers: int = 1):
+                 draft_layers: int = 1,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -205,6 +217,21 @@ class Replica:
         self.clock = clock
         self.policy = policy or RecoveryPolicy()
         self.metrics = metrics or ServeMetrics(clock=clock)
+        # fault-causality tracing: explicit tracer > the provided queue's
+        # tracer (a ServeGroup threads one per rank through both) > the free
+        # NullTracer. Hot-path call sites guard on ``self.trace.enabled`` so
+        # the disabled path never builds an event.
+        if tracer is not None:
+            self.trace = tracer
+        elif queue is not None and queue.tracer.enabled:
+            self.trace = queue.tracer
+        else:
+            self.trace = NULL_TRACER
+        # slot -> open recovery lane (trace_id, t0, code, action, window):
+        # begun at the recovery decision, closed by the first post-recovery
+        # committed token (or swept as abandoned when the request leaves the
+        # slot without one — its terminal response resolves the fault)
+        self._recovering: dict[int, dict] = {}
         self.max_request_retries = max_request_retries
         self.window = int(window)
         self.overlap = bool(self.window) and bool(overlap)
@@ -277,7 +304,8 @@ class Replica:
         else:
             pool_cap = max_len
         self.queue = queue or RequestQueue(
-            AdmissionPolicy(max_total_len=pool_cap), clock=clock)
+            AdmissionPolicy(max_total_len=pool_cap), clock=clock,
+            tracer=self.trace)
         self.sched = ContinuousBatchingScheduler(
             num_slots, self.queue, replica=rank, eos_id=eos_id, clock=clock,
             prefill_budget=prefill_budget,
@@ -361,6 +389,10 @@ class Replica:
             self.page_table[slot, :] = self.layout.sentinel
             self.metrics.record_pages(freed=len(freed),
                                       in_use=self.alloc.pages_in_use)
+            if self.trace.enabled:
+                self.trace.instant("page_free", "page", tid=slot, slot=slot,
+                                   pages=len(freed),
+                                   in_use=self.alloc.pages_in_use)
 
     def _oldest_active(self, exclude: frozenset[int]) -> Optional[int]:
         """Eviction victim: the oldest-arrival active lane that owns pages."""
@@ -381,6 +413,9 @@ class Replica:
         contract: zero dropped requests). The in-flight speculative window's
         lane is invalidated so its stale block is skipped at retirement."""
         req = self.sched.preempt(victim)          # on_release frees the pages
+        if self.trace.enabled:
+            self.trace.instant("page_evict", "page", tid=victim, slot=victim,
+                               trace_id=req.trace_id)
         self.queue.requeue(req)
         self.metrics.record_page_eviction()
         if self._pending is not None:
@@ -422,6 +457,9 @@ class Replica:
         self.page_table[slot, n_owned - len(got):n_owned] = got
         self.metrics.record_pages(allocated=len(got),
                                   in_use=self.alloc.pages_in_use)
+        if self.trace.enabled:
+            self.trace.instant("page_alloc", "page", tid=slot, slot=slot,
+                               pages=len(got), in_use=self.alloc.pages_in_use)
         return got
 
     def _paged_prepare(self, plan: dict) -> None:
@@ -499,6 +537,7 @@ class Replica:
         assert self.submit(req) is None
         self.run()
         self.metrics = ServeMetrics(clock=self.clock)
+        self.trace.clear()       # compile-time spans would pollute the trace
 
     # ------------------------------------------------------------- submission
     def submit(self, req: Request) -> Optional[Response]:
@@ -579,9 +618,13 @@ class Replica:
             out.append(Response(id=req.id, status=EXPIRED,
                                 latency_s=now - req.arrival_t,
                                 replica=self.rank,
-                                detail="deadline passed in queue"))
+                                detail="deadline passed in queue",
+                                trace_id=req.trace_id))
         out.extend(self.sched.expire_active(now))
         for slot, _req in self.sched.backfill(now):
+            if self.trace.enabled and _req.trace_id is not None:
+                self.trace.instant("slot_assign", "sched", ts=now, tid=slot,
+                                   trace_id=_req.trace_id, slot=slot)
             if self.overlap:
                 # admission is a background lane: the scheduler chunks the
                 # prompt into subsequent decode windows — no blocking prefill
@@ -598,6 +641,11 @@ class Replica:
             out.extend(self._decode_step())
         for resp in out:
             self.metrics.record_response(resp)
+        if self.trace.enabled:
+            t_done = self.clock()
+            for resp in out:
+                self.trace.end_request(resp, t_done)
+            self._sweep_recoveries(t_done)
         return out
 
     def run(self, *, max_steps: int = 100_000) -> list[Response]:
@@ -621,6 +669,54 @@ class Replica:
     def idle(self) -> bool:
         return (not len(self.queue) and not self.sched.has_active()
                 and self._pending is None)
+
+    # ------------------------------------------------------ recovery lanes (obs)
+    def _trace_recovery_begin(self, slot: int, trace_id: Optional[int],
+                              code: int, action: str, window: int,
+                              now: float) -> None:
+        """Open a recovery lane for ``slot`` (closing, as re-faulted, any lane
+        the same slot already had open — its recompute never produced a
+        healthy token before faulting again)."""
+        old = self._recovering.pop(slot, None)
+        if old is not None:
+            self.trace.span("recovery", "recovery", old["t0"], now, tid=slot,
+                            trace_id=old["trace_id"], slot=slot,
+                            window=old["window"], action=old["action"],
+                            code=old["code"], outcome="refaulted")
+        if trace_id is None:
+            return
+        self._recovering[slot] = {"trace_id": trace_id, "t0": now,
+                                  "code": code, "action": action,
+                                  "window": window}
+
+    def _trace_recovery_end(self, slot: int, trace_id: Optional[int],
+                            now: float, outcome: str) -> None:
+        """Close ``slot``'s recovery lane: the span runs from the recovery
+        decision to the first healthy post-recovery token (outcome
+        ``recovered``)."""
+        ctx = self._recovering.get(slot)
+        if ctx is None or ctx["trace_id"] != trace_id:
+            return
+        del self._recovering[slot]
+        self.trace.span("recovery", "recovery", ctx["t0"], now, tid=slot,
+                        trace_id=trace_id, slot=slot, window=ctx["window"],
+                        action=ctx["action"], code=ctx["code"],
+                        outcome=outcome)
+
+    def _sweep_recoveries(self, now: float) -> None:
+        """Close recovery lanes whose request left the slot without committing
+        a post-recovery token (FAILED / EXPIRED / preempted): the request's
+        terminal response is what resolves the fault; the abandoned lane span
+        records that the recompute never finished."""
+        for slot, ctx in list(self._recovering.items()):
+            s = self.sched.slots[slot]
+            if s.active and s.req.trace_id == ctx["trace_id"]:
+                continue
+            del self._recovering[slot]
+            self.trace.span("recovery", "recovery", ctx["t0"], now, tid=slot,
+                            trace_id=ctx["trace_id"], slot=slot,
+                            window=ctx["window"], action=ctx["action"],
+                            code=ctx["code"], outcome="abandoned")
 
     # ------------------------------------------------------------ decode path
     def _decode_step(self) -> list[Response]:
@@ -669,6 +765,7 @@ class Replica:
         self._step_count += 1
         sched = self.sched
         K = self.window
+        t_disp = self.clock() if self.trace.enabled else 0.0
         # speculation: prompt feed rides the verify width, so one window can
         # consume up to K*(D+1) prompt tokens per lane
         chunk_width = (self.draft_len + 1) if self.speculate else 1
@@ -717,6 +814,14 @@ class Replica:
                 else:
                     start[slot] = K
                 self.metrics.record_chunk(cp.rem)
+                if self.trace.enabled:
+                    tr = sched.slots[slot].req.trace_id
+                    if tr is not None:
+                        self.trace.instant(
+                            "chunk", "prefill", ts=t_disp, tid=slot,
+                            trace_id=tr, slot=slot, tokens=cp.rem,
+                            fresh=cp.fresh, exhausts=cp.exhausts,
+                            window=self._step_count)
             if not self.speculate:
                 chunk = chunk[:, 0, :]          # plain engines feed 1/step
             if self.speculate:
@@ -756,17 +861,29 @@ class Replica:
             start=start,
             start_row=start_row if self.speculate else None,
             rem0=rem0 if self.speculate else None,
-            deferred=deferred if self.speculate else None)
+            deferred=deferred if self.speculate else None,
+            t_dispatch=t_disp, index=self._step_count,
+            trace_ids=(tuple(s.req.trace_id if s.active else None
+                             for s in sched.slots)
+                       if self.trace.enabled else ()))
 
     def _retire_window(self, win: _WindowInFlight) -> list[Response]:
         if not win.fut.done():
             # the device is still computing this window at its retirement —
             # the pipeline, not the host, is the bottleneck right now
             self.metrics.record_window_wait()
+            if self.trace.enabled:
+                self.trace.instant("window_wait", "window", window=win.index)
         try:
             block = win.fut.wait()
         except PropagatedError as exc:
+            if self.trace.enabled:
+                self.trace.span("window", "window", win.t_dispatch,
+                                self.clock(), window=win.index, faulted=True)
             return self._recover_window(win, exc)
+        if self.trace.enabled:
+            self.trace.span("window", "window", win.t_dispatch, self.clock(),
+                            window=win.index, faulted=False)
         if self.speculate:
             toks, counts = (np.asarray(x) for x in jax.device_get(block))
             self._note_advance(win, counts)
@@ -812,6 +929,9 @@ class Replica:
                 per_slot[slot] = (d, a)
         if drafted:
             self.metrics.record_spec(drafted, accepted, per_slot)
+            if self.trace.enabled:
+                self.trace.instant("speculate", "spec", window=win.index,
+                                   drafted=drafted, accepted=accepted)
 
     def _flat_block(self, win: _WindowInFlight, toks: np.ndarray,
                     counts: np.ndarray, slot: int, lo: int,
@@ -863,10 +983,23 @@ class Replica:
                 block = toks[lo:limit, slot]
             else:
                 block = self._flat_block(win, toks, counts, slot, lo, limit)
+            if self.trace.enabled:
+                # capture before commit: a finishing lane clears its slot
+                tr = s.req.trace_id
+                first_before = s.t_first
             k, done = (self.sched.commit_block(slot, block, now)
                        if len(block) else (0, None))
             committed += k
             discarded += emitted - k
+            if self.trace.enabled and tr is not None:
+                self.trace.span("decode", "window", win.t_dispatch, now,
+                                tid=slot, trace_id=tr, window=win.index,
+                                committed=k, discarded=emitted - k)
+                if k and first_before is None:
+                    self.trace.instant("first_token", "request", ts=now,
+                                       tid=slot, trace_id=tr)
+                if k:
+                    self._trace_recovery_end(slot, tr, now, "recovered")
             if done is not None:
                 out.append(done)
         self.metrics.record_window(committed, discarded, K)
@@ -912,14 +1045,17 @@ class Replica:
         decision = self.policy.decide(exc, self._step_count)
         self.metrics.record_fault(self._step_count, int(exc.combined_code),
                                   decision.action.value, tuple(faulted))
+        # per-slot exact error words from the (K, slots) history OR-fold:
+        # unlike the enumeration table it never truncates, so both the paged
+        # ledger repair and the fault spans can attribute every slot even
+        # under an enumeration-saturating burst
+        codes = (win.fut.fault_codes()
+                 if (self.paged or self.trace.enabled) else None)
         if self.paged:
             # page-ownership faults get their own ledger record: the LFLR
             # re-queue repairs them too (free + re-acquire rebuilds the
             # mapping), but a PAGE_FAULT means the host ledger and device
-            # table diverged — worth counting separately from soft faults.
-            # fault_codes() reads the history, so attribution survives even
-            # an enumeration-table-saturating burst.
-            codes = win.fut.fault_codes()
+            # table diverged — worth counting separately from soft faults
             page_slots = tuple(
                 s for s in faulted if codes is not None
                 and int(codes[s]) & int(ErrorCode.PAGE_FAULT))
@@ -927,6 +1063,23 @@ class Replica:
                 self.metrics.record_fault(self._step_count,
                                           int(ErrorCode.PAGE_FAULT),
                                           "page_reclaim", page_slots)
+        if self.trace.enabled:
+            # one fault event per attributed slot, carrying the slot's exact
+            # error word (bit-for-bit what fault_codes() read back) and the
+            # (window, step) the history latched it at — the detection edge
+            # of the causal chain
+            t_fault = self.clock()
+            for slot in faulted:
+                tr = win.trace_ids[slot] if win.trace_ids else None
+                word = (int(codes[slot]) if codes is not None
+                        else int(exc.combined_code))
+                step_i = (int(steps[slot])
+                          if steps is not None and steps[slot] >= 0 else None)
+                self.trace.instant(
+                    "fault", "fault", ts=t_fault, tid=slot, trace_id=tr,
+                    slot=slot, window=win.index, step=step_i, code=word,
+                    code_names=[c.name for c in ErrorCode(word).classes()],
+                    action=decision.action.value)
         if decision.action is Action.ROLLBACK:
             targets, fail_now = list(self.sched.active_slots()), False
         elif decision.action is Action.ABORT:
@@ -953,6 +1106,12 @@ class Replica:
                     # lane would re-raise this fault as a new one at retire
                     self._pending.valid[slot] = False
                 continue
+            if self.trace.enabled:
+                word = (int(codes[slot]) if codes is not None
+                        and slot in faulted_set else 0)
+                self._trace_recovery_begin(
+                    slot, s.req.trace_id, word, decision.action.value,
+                    win.index, self.clock())
             resp = self._lflr_slot(slot)     # LFLR: recompute, don't restart
             if resp is not None:
                 out.append(resp)
@@ -982,6 +1141,23 @@ class Replica:
             faulted = list(self.sched.active_slots())
         self.metrics.record_fault(self._step_count, int(exc.combined_code),
                                   decision.action.value, tuple(faulted))
+        slot_codes: dict[int, int] = {}
+        if self.trace.enabled:
+            # stepwise engine: no window history — the enumeration's
+            # per-(slot, code) pairs are the exact attribution
+            for e in exc.errors:
+                if 0 <= e.rank < num_slots:
+                    slot_codes[e.rank] = slot_codes.get(e.rank, 0) | int(e.code)
+            t_fault = self.clock()
+            for slot in faulted:
+                s = self.sched.slots[slot]
+                tr = s.req.trace_id if s.active else None
+                word = slot_codes.get(slot, int(exc.combined_code))
+                self.trace.instant(
+                    "fault", "fault", ts=t_fault, tid=slot, trace_id=tr,
+                    slot=slot, step=self._step_count, code=word,
+                    code_names=[c.name for c in ErrorCode(word).classes()],
+                    action=decision.action.value)
         # Slots are independent under vmap: the dispatched outputs of the
         # non-faulted slots are valid, so salvage them and only recompute the
         # attributed ones — this is what keeps one bad sequence from stalling
@@ -1012,6 +1188,12 @@ class Replica:
                     slot, FAILED,
                     detail=f"{decision.reason} (retries={retries})"))
                 continue
+            if self.trace.enabled:
+                word = (slot_codes.get(slot, int(exc.combined_code))
+                        if slot in faulted_set else 0)
+                self._trace_recovery_begin(
+                    slot, self.sched.request(slot).trace_id, word,
+                    decision.action.value, self._step_count, self.clock())
             resp = self._prefill_slot(slot)  # LFLR: recompute, don't restart
             if resp is not None:
                 out.append(resp)
@@ -1037,6 +1219,10 @@ class Replica:
         (re-acquired, in-program-scrubbed) pool pages — there is no cache to
         insert afterwards, only the device token feed to update."""
         t0 = self.clock()
+        if self.trace.enabled:
+            # capture before commit: a finishing lane clears its slot
+            tr = self.sched.request(slot).trace_id
+            first_before = self.sched.slots[slot].t_first
         try:
             while True:
                 tokens = np.asarray([self.sched.sequence_tokens(slot)],
@@ -1070,6 +1256,17 @@ class Replica:
                     self.metrics.record_fault(self._step_count,
                                               int(exc.combined_code),
                                               "prefill_retry", (slot,))
+                    if self.trace.enabled:
+                        word = int(exc.combined_code)
+                        self.trace.instant(
+                            "fault", "fault", tid=slot, trace_id=tr,
+                            slot=slot, step=self._step_count, code=word,
+                            code_names=[c.name
+                                        for c in ErrorCode(word).classes()],
+                            action="prefill_retry")
+                        self._trace_recovery_begin(
+                            slot, tr, word, "prefill_retry",
+                            self._step_count, self.clock())
                     if retries > self.max_request_retries:
                         return self.sched.evict(
                             slot, FAILED,
@@ -1090,8 +1287,17 @@ class Replica:
                 # only the stepwise commit path reads logits back per slot
                 self._slot_logits = self._slot_logits.at[slot].set(
                     logits.astype(jnp.float32))
-            resp = self.sched.commit_token(slot, tok, self.clock())
+            t_commit = self.clock()
+            resp = self.sched.commit_token(slot, tok, t_commit)
             self.metrics.record_prefill(1)
+            if self.trace.enabled and tr is not None:
+                self.trace.span("prefill", "prefill", t0, t_commit, tid=slot,
+                                trace_id=tr, slot=slot,
+                                tokens=int(tokens.shape[1]))
+                if first_before is None:
+                    self.trace.instant("first_token", "request", ts=t_commit,
+                                       tid=slot, trace_id=tr)
+                self._trace_recovery_end(slot, tr, t_commit, "recovered")
             if self.window:
                 s = self.sched.slots[slot]
                 self._dev_pos[slot] = s.seq_len - 1 if s.active else 0
