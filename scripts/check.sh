@@ -93,6 +93,19 @@ run_trace_smoke() {
 echo "== trace smoke: benchmarks.serving --smoke --trace + trace_tool =="
 stage "trace smoke" run_trace_smoke
 
+# time-boxed coverage-guided fuzz sweep over two representative engines; a
+# nonzero exit means a reproducible counterexample was found (and written to
+# tests/fuzz_corpus by a full run — the smoke uses --no-promote so CI never
+# commits corpus entries, it only fails loudly and uploads fuzz-out/)
+run_fuzz_smoke() {
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python scripts/fuzz.py --budget 8 --seed 0 \
+        --engines overlap,overlap_paged --time-box 300 --no-promote \
+        --db fuzz-out/coverage_db.json --report fuzz-out/report.json
+}
+echo "== fuzz smoke: scripts/fuzz.py --budget 8 --time-box 300 =="
+stage "fuzz smoke" run_fuzz_smoke
+
 echo "== bench-regression gate: scripts/bench_gate.py =="
 stage "bench gate" python scripts/bench_gate.py
 

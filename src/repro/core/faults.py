@@ -15,14 +15,16 @@ Two injection surfaces:
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .errors import ErrorCode
+from .errors import ATTRIBUTION_ONLY, ErrorCode
 
 # injection bits (distinct from ErrorCode — these say what to *break*, the probes
 # decide what they *see*)
@@ -32,44 +34,147 @@ INJ_SPIKE_LOSS = 1 << 2
 INJ_BAD_DATA = 1 << 3
 INJ_STATE_NAN = 1 << 4
 
+_INJ_BITS = {
+    "nan_loss": INJ_NAN_LOSS,
+    "nan_grad": INJ_NAN_GRAD,
+    "spike_loss": INJ_SPIKE_LOSS,
+    "bad_data": INJ_BAD_DATA,
+    "state_nan": INJ_STATE_NAN,
+}
+# host-level faults executed on the simulated cluster (not via inject words)
+_HOST_KINDS = frozenset({"kill", "straggle", "user"})
+# every legal FaultSpec.kind: the device-word kinds, the host kinds, and
+# "code" (inject a raw ErrorCode word in-band — the fuzzer's device-fault-word
+# mutation surface, validated by validate_injectable_code)
+KNOWN_KINDS = frozenset(_INJ_BITS) | _HOST_KINDS | {"code"}
+
+# ErrorCode bits that may legally be *injected* as faults: every defined soft /
+# structural class except the attribution-only lanes (DRAFT_REJECT records an
+# expected event, injecting it as a fault would make a reject-only window
+# raise — exactly the contract violation the wait-side masking exists to
+# prevent) and the hard-fault bits (hard faults are injected as rank kills,
+# never as in-band words: a word cannot take a rank down).
+_DEFINED_MASK = 0
+for _c in ErrorCode:
+    _DEFINED_MASK |= _c.value
+_HARD_MASK = int(ErrorCode.RANK_FAILED | ErrorCode.COMM_CORRUPTED)
+INJECTABLE_CODE_MASK = _DEFINED_MASK & ~int(ATTRIBUTION_ONLY) & ~_HARD_MASK
+
+
+def validate_injectable_code(code: int | ErrorCode) -> int:
+    """Check that ``code`` is a nonzero OR of injectable soft/structural
+    :class:`ErrorCode` bits; returns the validated int word.
+
+    Raises ``ValueError`` for the empty word, undefined bits, attribution-only
+    lanes (``DRAFT_REJECT``) and hard-fault bits — silently passing any of
+    those through would let a fuzzer (or a typo) schedule a "fault" the
+    recovery contract explicitly says must never raise."""
+    word = int(code)
+    if word == 0:
+        raise ValueError("cannot inject ErrorCode.OK (empty fault word)")
+    bad = word & ~INJECTABLE_CODE_MASK
+    if bad:
+        names = [c.name for c in ErrorCode
+                 if c.value & bad and c.value & (c.value - 1) == 0
+                 and c != ErrorCode.OK]
+        raise ValueError(
+            f"code {word:#x} is not injectable: offending bits "
+            f"{names or [hex(bad)]} (attribution-only lanes like DRAFT_REJECT "
+            "and hard-fault bits cannot be injected as device fault words)")
+    return word
+
 
 @dataclass(frozen=True)
 class FaultSpec:
     step: int
-    kind: str          # nan_loss|nan_grad|spike_loss|bad_data|state_nan|kill|straggle|user
-    rank: int = 0
+    kind: str          # nan_loss|nan_grad|spike_loss|bad_data|state_nan|code|kill|straggle|user
+    rank: Optional[int] = 0  # None = "a seeded-random alive rank" — resolved
+                             # to a concrete rank by FaultSchedule.resolve()
     magnitude: float = 1.0   # straggle: seconds; spike: factor
+    code: int = 0            # kind="code": the ErrorCode word to latch in-band
 
     @property
     def inject_bit(self) -> int:
-        return {
-            "nan_loss": INJ_NAN_LOSS,
-            "nan_grad": INJ_NAN_GRAD,
-            "spike_loss": INJ_SPIKE_LOSS,
-            "bad_data": INJ_BAD_DATA,
-            "state_nan": INJ_STATE_NAN,
-        }.get(self.kind, 0)
+        return _INJ_BITS.get(self.kind, 0)
 
 
 @dataclass
 class FaultSchedule:
+    """A deterministic, fully seedable fault plan.
+
+    ``seed`` drives every random choice the schedule (or a consumer holding
+    it) makes: :meth:`resolve` materialises ``rank=None`` wildcard specs into
+    concrete ranks, and :meth:`rng_for` derives a per-(rank, step) generator
+    for consumer-side choices (e.g. which active slot a ``state_nan``
+    injection poisons) — so any trajectory built on a schedule replays
+    bit-for-bit from ``(specs, seed)`` alone.
+    """
+
     specs: Sequence[FaultSpec] = ()
+    seed: int = 0
 
     def at(self, step: int, rank: int | None = None) -> list[FaultSpec]:
         return [s for s in self.specs
                 if s.step == step and (rank is None or s.rank == rank)]
 
     def inject_word(self, step: int, rank: int | None = None) -> int:
+        """OR of the INJ_* device-injection bits scheduled for (step, rank).
+
+        Unknown kinds are rejected loudly: a spec whose kind matches no
+        injection surface would otherwise be dropped on the floor and the
+        test that scheduled it would silently assert nothing."""
         word = 0
         for s in self.at(step, rank):
+            if s.kind not in KNOWN_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {s.kind!r} (known: "
+                    f"{sorted(KNOWN_KINDS)})")
+            if s.kind == "code":
+                # validated here so a bad spec fails at schedule time even if
+                # the consumer only reads the INJ word; the code itself is
+                # delivered via code_word()
+                validate_injectable_code(s.code)
             word |= s.inject_bit
         return word
 
+    def code_word(self, step: int, rank: int | None = None) -> int:
+        """OR of the validated in-band ErrorCode words scheduled for
+        (step, rank) via ``kind="code"`` specs."""
+        word = 0
+        for s in self.at(step, rank):
+            if s.kind == "code":
+                word |= validate_injectable_code(s.code)
+        return word
+
     def device_faults(self) -> list[FaultSpec]:
-        return [s for s in self.specs if s.inject_bit]
+        return [s for s in self.specs
+                if s.inject_bit or s.kind == "code"]
 
     def host_faults(self) -> list[FaultSpec]:
-        return [s for s in self.specs if not s.inject_bit]
+        return [s for s in self.specs if s.kind in _HOST_KINDS]
+
+    # ------------------------------------------------------------ determinism
+    def rng_for(self, rank: int, step: int) -> np.random.Generator:
+        """Per-(rank, step) generator derived from the schedule seed — the
+        consumer-side randomness hook (slot picks, victim picks) that keeps
+        every injection replayable from the seed alone."""
+        return np.random.default_rng((int(self.seed), int(rank), int(step)))
+
+    def resolve(self, ranks: Sequence[int]) -> "FaultSchedule":
+        """Materialise ``rank=None`` wildcard specs into concrete members of
+        ``ranks``, chosen by the schedule's seeded rng. Deterministic and
+        idempotent for already-concrete schedules; each wildcard gets an
+        independent draw keyed by its spec index."""
+        ranks = sorted(int(r) for r in ranks)
+        if not ranks:
+            raise ValueError("cannot resolve a schedule over zero ranks")
+        out = []
+        for i, s in enumerate(self.specs):
+            if s.rank is None:
+                rng = np.random.default_rng((int(self.seed), 0xFA017, i))
+                s = dataclasses.replace(s, rank=int(rng.choice(ranks)))
+            out.append(s)
+        return FaultSchedule(tuple(out), seed=self.seed)
 
 
 # ------------------------------------------------------------------ device helpers
@@ -121,8 +226,12 @@ def inject_state(state, inject: jax.Array):
 
 # -------------------------------------------------------------------- host helpers
 def apply_host_fault(spec: FaultSpec, ctx=None) -> Optional[ErrorCode]:
-    """Execute a host-level fault on the simulated cluster. Returns the error code a
-    detector would raise locally, or None for silent faults (kill)."""
+    """Execute a host-level fault on the simulated cluster. Returns the error
+    code a detector would raise locally, or None for silent faults (kill).
+
+    Only host kinds are accepted: handing a device-injection spec (or an
+    unknown kind) here is a scheduling bug, and silently returning None would
+    make the caller believe the fault fired."""
     if spec.kind == "kill":
         if ctx is not None:
             ctx.die()  # unwinds the rank thread (hard fault)
@@ -132,4 +241,7 @@ def apply_host_fault(spec: FaultSpec, ctx=None) -> Optional[ErrorCode]:
         return ErrorCode.STRAGGLER
     if spec.kind == "user":
         return ErrorCode.USER
-    return None
+    raise ValueError(
+        f"apply_host_fault: {spec.kind!r} is not a host fault kind "
+        f"(host kinds: {sorted(_HOST_KINDS)}; device kinds are injected "
+        "in-band via inject_word/code_word)")

@@ -1,0 +1,133 @@
+"""Trajectories: fully deterministic fault-injection scenarios.
+
+A :class:`Trajectory` is the fuzzer's genome — one self-contained, seeded
+description of a serving run plus every fault injected into it. It carries
+*everything* the runner needs: the engine variant (which serving code path),
+the synthetic request load (derived arithmetically from the counts, never
+stored), and an ordered list of injection :class:`Op`\\ s with explicit
+timing. Replay is therefore bit-for-bit: the same trajectory JSON produces
+the same dispatches, the same injected words, the same recovery decisions and
+the same token streams, on any machine (greedy decode + seeded injection =
+no hidden entropy).
+
+Op timing model (the injection surfaces of DESIGN.md §3.6):
+
+* ``word``    — OR an :class:`~repro.core.errors.ErrorCode` word into the
+  device error words of dispatch ``cycle`` at window step ``step``, slot
+  ``slot`` (via ``Replica(fault_injector=...)``): the in-band mutation that
+  reaches every soft-error lane of the recovery matrix, timed relative to
+  window dispatch/retire, prefill chunks and speculative draft/verify
+  boundaries (all of which are window steps).
+* ``poison``  — NaN a real element of slot state / KV / page pool before
+  drive-loop cycle ``cycle`` (``Replica.inject_state_fault``): the probe
+  path, not just the word path.
+* ``page_table`` — unmap a lane's device page-table row behind the allocator
+  (``Replica.corrupt_page_table``): host-ledger/device-table divergence the
+  in-band ``PAGE_FAULT`` probe must latch.
+* ``preempt`` — pull a lane's request out mid-flight and requeue it
+  (``Replica.preempt_slot``): the zero-drop preemption path.
+* ``kill``    — hard-kill replica rank ``slot`` at serving round ``cycle``
+  (ServeGroup engines only): ULFM shrink + ledger re-route.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field, replace
+from typing import Iterable, Optional, Sequence
+
+OP_KINDS = ("word", "poison", "page_table", "preempt", "kill")
+
+#: Engine variants a trajectory can target. ``group`` is the multi-replica
+#: ULFM engine; the rest are single-replica serving code paths.
+SINGLE_ENGINES = ("stepwise", "window", "overlap", "overlap_paged",
+                  "spec", "spec_paged")
+GROUP_ENGINE = "group"
+ENGINES = SINGLE_ENGINES + (GROUP_ENGINE,)
+
+
+@dataclass(frozen=True)
+class Op:
+    """One injection, fully timed. ``slot`` doubles as the target rank for
+    ``kill`` ops; ``step``/``code`` are only meaningful for ``word`` ops."""
+
+    op: str
+    cycle: int
+    slot: int = 0
+    step: int = 0
+    code: int = 0
+
+    def __post_init__(self):
+        if self.op not in OP_KINDS:
+            raise ValueError(f"unknown op {self.op!r} (known: {OP_KINDS})")
+        if self.cycle < 0 or self.slot < 0 or self.step < 0:
+            raise ValueError(f"negative timing/target in {self!r}")
+        if self.op == "word" and self.code == 0:
+            raise ValueError("word op needs a nonzero ErrorCode word")
+
+
+@dataclass(frozen=True)
+class Trajectory:
+    """One deterministic fuzz scenario (see module docstring)."""
+
+    seed: int
+    engine: str
+    n_requests: int = 3
+    prompt_len: int = 5
+    max_new: int = 8
+    max_request_retries: int = 6
+    ops: tuple = ()
+    note: str = ""
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             f"(known: {ENGINES})")
+        if self.n_requests < 1 or self.prompt_len < 1 or self.max_new < 1:
+            raise ValueError("degenerate request load")
+        object.__setattr__(self, "ops", tuple(self.ops))
+        for op in self.ops:
+            if not isinstance(op, Op):
+                raise TypeError(f"ops must be Op instances, got {op!r}")
+            if (op.op == "kill") != (self.engine == GROUP_ENGINE):
+                raise ValueError(
+                    f"{op.op!r} op is {'only' if op.op == 'kill' else 'not'} "
+                    "valid on the group engine")
+
+    # ----------------------------------------------------------- derived load
+    def prompts(self) -> list[tuple]:
+        """The synthetic prompts, derived arithmetically (never stored): the
+        same scheme the serving test suites use, parameterised by the
+        trajectory so the reference cache can key on three small ints."""
+        return [tuple(5 + i + j for j in range(self.prompt_len))
+                for i in range(self.n_requests)]
+
+    def ops_of(self, *kinds: str) -> list[Op]:
+        return [o for o in self.ops if o.op in kinds]
+
+    def with_ops(self, ops: Iterable[Op]) -> "Trajectory":
+        return replace(self, ops=tuple(ops))
+
+    @property
+    def load_key(self) -> tuple:
+        """Reference-cache key: everything that shapes the *clean* token
+        streams (injections never do — that is the oracle)."""
+        return (self.n_requests, self.prompt_len, self.max_new)
+
+    # ------------------------------------------------------------------- JSON
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["ops"] = [asdict(o) for o in self.ops]
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Trajectory":
+        d = dict(d)
+        d["ops"] = tuple(Op(**o) for o in d.get("ops", ()))
+        return cls(**d)
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), sort_keys=True)
+
+    @classmethod
+    def loads(cls, s: str) -> "Trajectory":
+        return cls.from_json(json.loads(s))

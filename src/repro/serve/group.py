@@ -252,8 +252,14 @@ class ServeGroup:
         *round*: ``kind="kill"`` hard-kills a replica at the top of that round;
         ``kind="state_nan"`` flips a bit in one of its active sequences.
         Returns once every request has a terminal response on the survivors.
+
+        The schedule is fully seeded: wildcard specs (``rank=None``) are
+        resolved to concrete ranks up front via the schedule's own seed, and
+        the slot a ``state_nan`` poisons is drawn from a per-(rank, round)
+        generator derived from the same seed — so a fuzzer trajectory that
+        kills "some" replica replays bit-for-bit from ``(specs, seed)``.
         """
-        faults = faults or FaultSchedule()
+        faults = (faults or FaultSchedule()).resolve(range(self.nranks))
         ledger = _Ledger(requests, list(range(self.nranks)))
 
         # a request that could never fit a replica's page pool must be
@@ -300,7 +306,8 @@ class ServeGroup:
                                            rank=ctx.rank, round=round_i)
                         ctx.die()                       # never returns
                     elif spec.kind == "state_nan":
-                        slot = replica.inject_state_fault()
+                        slot = replica.inject_state_fault(
+                            rng=faults.rng_for(ctx.rank, round_i))
                         if slot is not None:
                             report.events.append(("inject", round_i, slot))
                 for req in ledger.take(ctx.rank):

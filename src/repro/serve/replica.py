@@ -71,6 +71,7 @@ from ..configs.base import ModelConfig
 from ..core.detect import ProbeConfig
 from ..core.device_channel import WORD_DTYPE, DeviceFuture
 from ..core.errors import ErrorCode, PropagatedError
+from ..core.faults import INJECTABLE_CODE_MASK as _INJECTABLE_MASK
 from ..core.recovery import Action, RecoveryPolicy
 from ..launch.paging import PagedLayout
 from ..launch.steps import (
@@ -207,7 +208,9 @@ class Replica:
                  paged_layout: Optional[PagedLayout] = None,
                  speculate: bool = False, draft_len: int = 3,
                  draft_layers: int = 1,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 fault_injector: Optional[Callable] = None,
+                 page_debug: Optional[bool] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -233,6 +236,18 @@ class Replica:
         # slot without one — its terminal response resolves the fault)
         self._recovering: dict[int, dict] = {}
         self.max_request_retries = max_request_retries
+        # deterministic in-band fault-word injection (the fuzzer's device
+        # mutation surface): called once per dispatch with the dispatch index
+        # and the words shape — (slots,) stepwise, (K, slots) windowed — and
+        # may return a uint32 array OR'd into the device error words *before*
+        # enumeration, so injected codes ride the exact deferred-detection /
+        # attribution path a probe-latched fault would. None = no injection.
+        self._injector = fault_injector
+        # debug-guarded page-ledger verification (fuzzing/tests): check the
+        # allocator invariant at every preempt/requeue and LFLR page-reclaim
+        # site so ledger corruption surfaces at the mutation site instead of
+        # steps later. Defaults to __debug__ (off under python -O).
+        self._page_debug = bool(__debug__ if page_debug is None else page_debug)
         self.window = int(window)
         self.overlap = bool(self.window) and bool(overlap)
         # ---- speculative decode windows (speculate=True) ------------------
@@ -371,6 +386,14 @@ class Replica:
         self._set_pos = jax.jit(lambda arr, slot, v: arr.at[slot].set(v))
 
     # ------------------------------------------------------------- page ledger
+    def _check_pages(self) -> None:
+        """Debug-guarded ledger invariant: every pool page free or owned
+        exactly once, right now. Called at the mutation sites (preempt,
+        requeue, LFLR reclaim) so a corrupted ledger fails at the op that
+        corrupted it, not at whatever later step happens to trip over it."""
+        if self._page_debug and self.alloc is not None:
+            self.alloc.check()
+
     def _can_admit(self, req: Request) -> bool:
         """Watermark admission: a fresh sequence joins only if its prompt's
         pages (plus the first generated position) fit with the configured
@@ -420,6 +443,7 @@ class Replica:
         self.metrics.record_page_eviction()
         if self._pending is not None:
             self._pending.valid[victim] = False
+        self._check_pages()
 
     def _grow_slot(self, slot: int, target_tokens: int, *,
                    exclude_self: bool = False) -> Optional[list[int]]:
@@ -482,6 +506,7 @@ class Replica:
             if cp.rem == 0 or not cp.fresh:
                 continue
             self._release_pages(slot)
+            self._check_pages()
             self.caches = self._reset(self.caches, self._fresh,
                                       jnp.int32(slot))
             self._set_dev_pos(slot, 0)
@@ -549,18 +574,23 @@ class Replica:
         return resp
 
     # ---------------------------------------------------------- fault surface
-    def inject_state_fault(self, slot: Optional[int] = None) -> Optional[int]:
+    def inject_state_fault(self, slot: Optional[int] = None, *,
+                           rng: Optional[np.random.Generator] = None
+                           ) -> Optional[int]:
         """Simulated SDC (paper §II-A): NaN one element of a slot's recurrent
         state on device — or, for attention-only architectures, of the K
         entry at position 0 of the slot's (paged or contiguous) KV cache,
         which the non-finite-logits probe then latches. ``slot=None`` picks
-        the first active slot. Returns the poisoned slot, or None if there
-        was nothing to poison (e.g. a paged lane holding no mapped page)."""
+        the first active slot — or a seeded-random active slot when ``rng``
+        is given (``FaultSchedule.rng_for`` hands one out per (rank, step),
+        so any randomized injection replays bit-for-bit from the schedule
+        seed alone). Returns the poisoned slot, or None if there was nothing
+        to poison (e.g. a paged lane holding no mapped page)."""
         if slot is None:
             active = self.sched.active_slots()
             if not active:
                 return None
-            slot = active[0]
+            slot = int(rng.choice(active)) if rng is not None else active[0]
         hit = []
 
         def poison(path, leaf):
@@ -607,6 +637,62 @@ class Replica:
                 "to poison")
         self.caches = poisoned
         return slot
+
+    def corrupt_page_table(self, slot: int) -> bool:
+        """Deterministic ledger-divergence injection (fuzzing/tests): unmap a
+        lane's device page-table row behind the allocator's back. The host
+        ledger still says the slot owns its pages; the device's mapping of
+        record says it owns nothing — exactly the corruption the in-band
+        ``PAGE_FAULT`` probe exists to latch at the next write. Returns True
+        iff there was a mapped row to corrupt."""
+        if not (self.paged and self.layout.has_paged_leaves):
+            return False
+        if int(self.page_table[slot, 0]) >= self.layout.num_pages:
+            return False                  # nothing mapped — nothing to diverge
+        self.page_table[slot, :] = self.layout.sentinel
+        return True
+
+    def preempt_slot(self, slot: int) -> bool:
+        """Deterministic preemption injection (fuzzing / external rebalance):
+        pull ``slot``'s request out mid-flight and requeue it ahead of its
+        class — the same zero-drop contract as the paged memory-pressure
+        eviction, exposed as an explicit hook. The in-flight window's lane is
+        invalidated (its block computed with the departed request's state)
+        and the page ledger, if any, is verified at the mutation site.
+        Returns True iff the slot held a request."""
+        s = self.sched.slots[slot]
+        if not s.active:
+            return False
+        req = self.sched.preempt(slot)    # on_release reclaims any pages
+        self.queue.requeue(req)
+        if self._pending is not None:
+            self._pending.valid[slot] = False
+        self._check_pages()
+        return True
+
+    def _inject_words(self, words, shape: tuple):
+        """OR the injector's scheduled fault word(s) for this dispatch into
+        the device error words, *before* masking/enumeration — an injected
+        code is indistinguishable from a probe-latched one from that point
+        on (deferred detection, (step, slot) attribution, recovery routing
+        all run for real). No-op (and zero extra dispatches) without an
+        injector."""
+        if self._injector is None:
+            return words
+        inj = self._injector(self._step_count, shape)
+        if inj is None:
+            return words
+        inj = np.asarray(inj, np.uint32)
+        if inj.shape != shape:
+            raise ValueError(
+                f"fault_injector returned shape {inj.shape}, expected {shape}")
+        bad = int(np.bitwise_or.reduce(inj, axis=None)) & ~int(
+            _INJECTABLE_MASK)
+        if bad:
+            raise ValueError(
+                f"fault_injector word {bad:#x} carries non-injectable bits "
+                "(attribution-only / hard / undefined)")
+        return jnp.bitwise_or(words, jnp.asarray(inj))
 
     # ------------------------------------------------------------- step cycle
     def step(self) -> list[Response]:
@@ -725,6 +811,7 @@ class Replica:
         mask = self.sched.active_mask()
         logits, caches, words = self._decode(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(pos))
+        words = self._inject_words(words, (self.sched.num_slots,))
         combined, count, table = self._enum(words, jnp.asarray(mask))
         fut = DeviceFuture(outputs=(logits, caches), word=combined,
                            count=count, table=table)
@@ -851,6 +938,7 @@ class Replica:
         self._dev_tokens = next_tok
         if not self.speculate:
             self._dev_pos = self._dev_pos + K
+        words = self._inject_words(words, (K, sched.num_slots))
         combined, count, table, hist = self._wenum(words, jnp.asarray(mask))
         fut = DeviceFuture(outputs=outputs, word=combined, count=count,
                            table=table, history=hist)
@@ -1231,6 +1319,7 @@ class Replica:
                     # recycle + reacquire the lane's pages for the full
                     # sequence plus its first generated write position
                     self._release_pages(slot)
+                    self._check_pages()
                     if self._grow_slot(slot, tokens.shape[1] + 1,
                                        exclude_self=True) is None:
                         raise AssertionError("blocking prefill self-evicted")

@@ -123,19 +123,25 @@ class PageAllocator:
 
     # -------------------------------------------------------------- invariant
     def check(self) -> None:
-        """Assert ledger consistency (tests / debugging): every page is free
-        or owned exactly once."""
+        """Assert ledger consistency (tests / debugging / the fuzzer oracle):
+        every page is free or owned exactly once. Raises ``AssertionError``
+        explicitly (not via ``assert``) so the invariant still fires under
+        ``python -O`` — a fuzz oracle that silently evaporates is worse than
+        none."""
         seen: dict[int, str] = {}
         for p in self._free:
-            assert p not in seen, f"page {p} double-listed as free"
+            if p in seen:
+                raise AssertionError(f"page {p} double-listed as free")
             seen[p] = "free"
         for slot, pages in self._owned.items():
             for p in pages:
-                assert p not in seen, (
-                    f"page {p} owned by slot {slot} and {seen[p]}")
+                if p in seen:
+                    raise AssertionError(
+                        f"page {p} owned by slot {slot} and {seen[p]}")
                 seen[p] = f"slot {slot}"
-        assert len(seen) == self.num_pages, (
-            f"{self.num_pages - len(seen)} pages leaked")
+        if len(seen) != self.num_pages:
+            raise AssertionError(
+                f"{self.num_pages - len(seen)} pages leaked")
 
 
 @dataclass

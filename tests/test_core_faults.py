@@ -1,0 +1,154 @@
+"""Unit tests for the seedable, validating fault-injection schedule.
+
+S1/S2 of the fuzzer PR: every random choice a schedule feeds its consumers
+replays bit-for-bit from the seed alone, and the injection surfaces reject
+unknown kinds and non-injectable ErrorCode words loudly instead of dropping
+them on the floor.
+"""
+import numpy as np
+import pytest
+
+from repro.core.errors import ATTRIBUTION_ONLY, ErrorCode
+from repro.core.faults import (
+    INJ_NAN_LOSS,
+    INJECTABLE_CODE_MASK,
+    KNOWN_KINDS,
+    FaultSchedule,
+    FaultSpec,
+    apply_host_fault,
+    validate_injectable_code,
+)
+
+SOFT = ErrorCode.NONFINITE_LOSS
+STRUCT = ErrorCode.PAGE_FAULT
+
+
+# ------------------------------------------------------- injectable-code mask
+class TestValidateInjectableCode:
+    def test_every_single_bit_injectable_class_passes(self):
+        for cls in ErrorCode(INJECTABLE_CODE_MASK).classes():
+            assert validate_injectable_code(cls) == int(cls)
+
+    def test_combined_soft_word_passes(self):
+        word = int(SOFT | ErrorCode.OVERFLOW | STRUCT)
+        assert validate_injectable_code(word) == word
+
+    def test_zero_word_rejected(self):
+        with pytest.raises(ValueError, match="OK"):
+            validate_injectable_code(0)
+
+    def test_attribution_only_rejected(self):
+        with pytest.raises(ValueError, match="DRAFT_REJECT"):
+            validate_injectable_code(ATTRIBUTION_ONLY)
+
+    def test_hard_fault_bits_rejected(self):
+        for hard in (ErrorCode.RANK_FAILED, ErrorCode.COMM_CORRUPTED):
+            with pytest.raises(ValueError, match=hard.name):
+                validate_injectable_code(hard)
+
+    def test_undefined_bit_rejected(self):
+        with pytest.raises(ValueError, match="not injectable"):
+            validate_injectable_code(1 << 30)
+
+    def test_one_bad_bit_taints_a_valid_word(self):
+        with pytest.raises(ValueError, match="DRAFT_REJECT"):
+            validate_injectable_code(int(SOFT) | int(ATTRIBUTION_ONLY))
+
+    def test_mask_excludes_exactly_the_forbidden_lanes(self):
+        assert INJECTABLE_CODE_MASK & int(ATTRIBUTION_ONLY) == 0
+        assert INJECTABLE_CODE_MASK & int(ErrorCode.RANK_FAILED) == 0
+        assert INJECTABLE_CODE_MASK & int(ErrorCode.COMM_CORRUPTED) == 0
+        assert INJECTABLE_CODE_MASK & int(SOFT)
+
+
+# ------------------------------------------------------- schedule validation
+class TestScheduleValidation:
+    def test_unknown_kind_raises_at_read(self):
+        sched = FaultSchedule([FaultSpec(step=1, kind="nan_los", rank=0)])
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            sched.inject_word(1, 0)
+
+    def test_known_kinds_cover_the_docstring(self):
+        assert "code" in KNOWN_KINDS
+        assert {"kill", "straggle", "user"} <= KNOWN_KINDS
+
+    def test_code_spec_validated_even_via_inject_word(self):
+        sched = FaultSchedule([FaultSpec(step=1, kind="code", rank=0,
+                                         code=int(ATTRIBUTION_ONLY))])
+        with pytest.raises(ValueError, match="DRAFT_REJECT"):
+            sched.inject_word(1, 0)
+        with pytest.raises(ValueError, match="DRAFT_REJECT"):
+            sched.code_word(1, 0)
+
+    def test_code_word_ors_scheduled_codes(self):
+        sched = FaultSchedule([
+            FaultSpec(step=2, kind="code", rank=0, code=int(SOFT)),
+            FaultSpec(step=2, kind="code", rank=0, code=int(STRUCT)),
+            FaultSpec(step=3, kind="code", rank=0, code=int(ErrorCode.USER)),
+        ])
+        assert sched.code_word(2, 0) == int(SOFT | STRUCT)
+        assert sched.code_word(3, 0) == int(ErrorCode.USER)
+        assert sched.code_word(4, 0) == 0
+        # a "code" spec carries no INJ_* device bit of its own
+        assert sched.inject_word(2, 0) == 0
+
+    def test_device_and_host_fault_partition(self):
+        specs = [FaultSpec(step=1, kind="nan_loss", rank=0),
+                 FaultSpec(step=1, kind="code", rank=0, code=int(SOFT)),
+                 FaultSpec(step=2, kind="kill", rank=1),
+                 FaultSpec(step=3, kind="user", rank=0)]
+        sched = FaultSchedule(specs)
+        assert sched.device_faults() == specs[:2]
+        assert sched.host_faults() == specs[2:]
+        assert sched.inject_word(1, 0) == INJ_NAN_LOSS
+
+    def test_apply_host_fault_rejects_device_kinds(self):
+        with pytest.raises(ValueError, match="not a host fault kind"):
+            apply_host_fault(FaultSpec(step=1, kind="nan_loss", rank=0))
+        with pytest.raises(ValueError, match="not a host fault kind"):
+            apply_host_fault(FaultSpec(step=1, kind="code", rank=0,
+                                       code=int(SOFT)))
+
+    def test_apply_host_fault_user_code(self):
+        assert (apply_host_fault(FaultSpec(step=1, kind="user", rank=0))
+                is ErrorCode.USER)
+
+
+# ------------------------------------------------------------- seedability
+class TestSeedability:
+    def test_rng_for_replays_from_seed_alone(self):
+        a = FaultSchedule(seed=7).rng_for(rank=1, step=3)
+        b = FaultSchedule(seed=7).rng_for(rank=1, step=3)
+        assert a.integers(1 << 30) == b.integers(1 << 30)
+
+    def test_rng_for_differs_across_rank_and_step(self):
+        base = FaultSchedule(seed=7)
+        draws = {(r, s): int(base.rng_for(r, s).integers(1 << 30))
+                 for r in range(3) for s in range(3)}
+        assert len(set(draws.values())) == len(draws)
+
+    def test_resolve_materialises_wildcards_deterministically(self):
+        specs = [FaultSpec(step=2, kind="kill", rank=None),
+                 FaultSpec(step=4, kind="kill", rank=None)]
+        a = FaultSchedule(specs, seed=11).resolve(range(4))
+        b = FaultSchedule(specs, seed=11).resolve(range(4))
+        assert [s.rank for s in a.specs] == [s.rank for s in b.specs]
+        assert all(s.rank in range(4) for s in a.specs)
+        # a different seed may pick different victims; the draw is per-index,
+        # so the two wildcard specs are resolved independently
+        c = FaultSchedule(specs, seed=12).resolve(range(4))
+        assert all(s.rank is not None for s in c.specs)
+
+    def test_resolve_is_idempotent_and_preserves_concrete_ranks(self):
+        specs = [FaultSpec(step=2, kind="kill", rank=3),
+                 FaultSpec(step=4, kind="state_nan", rank=None)]
+        once = FaultSchedule(specs, seed=5).resolve(range(6))
+        twice = once.resolve(range(6))
+        assert once.specs == twice.specs
+        assert once.specs[0].rank == 3
+        assert once.seed == 5
+
+    def test_resolve_over_zero_ranks_raises(self):
+        with pytest.raises(ValueError, match="zero ranks"):
+            FaultSchedule([FaultSpec(step=1, kind="kill", rank=None)]
+                          ).resolve([])

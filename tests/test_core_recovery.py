@@ -1,0 +1,137 @@
+"""Unit tests for the escalating RecoveryPolicy (S3 of the fuzzer PR).
+
+The policy is the routing table the fuzzer's coverage universe is derived
+from (``repro.fuzz.coverage.action_ladder`` replays it), so its decision
+matrix gets pinned here decision by decision: per-code routing, the
+repeat-escalation ladder, window expiry, hard-fault shrink vs rollback, and
+reset semantics.
+"""
+import pytest
+
+from repro.core.errors import (
+    CommCorruptedError,
+    ErrorCode,
+    PropagatedError,
+    RankError,
+)
+from repro.core.recovery import Action, RecoveryPolicy
+
+
+def _exc(code: ErrorCode) -> PropagatedError:
+    return PropagatedError([RankError(rank=0, code=int(code))])
+
+
+# ------------------------------------------------------------ per-code routing
+class TestRouting:
+    @pytest.mark.parametrize("code", [
+        ErrorCode.NONFINITE_LOSS, ErrorCode.NONFINITE_GRAD,
+        ErrorCode.OVERFLOW, ErrorCode.DATA_FAULT,
+    ])
+    def test_transient_soft_family_skips_then_restores(self, code):
+        pol = RecoveryPolicy()
+        assert pol.decide(_exc(code), 1).action is Action.SKIP_BATCH
+        assert pol.decide(_exc(code), 2).action is Action.RESTORE_GOOD
+
+    def test_divergence_resets_optimizer_with_lr_decay(self):
+        pol = RecoveryPolicy(divergence_lr_decay=0.25)
+        d = pol.decide(_exc(ErrorCode.DIVERGENCE), 1)
+        assert d.action is Action.RESET_OPTIMIZER
+        assert d.lr_scale == 0.25
+
+    @pytest.mark.parametrize("code", [ErrorCode.STATE_FAULT,
+                                      ErrorCode.PAGE_FAULT])
+    def test_state_and_page_faults_restore_immediately(self, code):
+        assert (RecoveryPolicy().decide(_exc(code), 1).action
+                is Action.RESTORE_GOOD)
+
+    @pytest.mark.parametrize("code", [ErrorCode.ROUTER_OVERFLOW,
+                                      ErrorCode.STRAGGLER])
+    def test_flow_conditions_continue(self, code):
+        assert RecoveryPolicy().decide(_exc(code), 1).action is Action.CONTINUE
+
+    def test_user_and_default_skip_batch(self):
+        assert (RecoveryPolicy().decide(_exc(ErrorCode.USER), 1).action
+                is Action.SKIP_BATCH)
+        # NONFINITE_PARAM is outside the transient family: default route
+        assert (RecoveryPolicy().decide(_exc(ErrorCode.NONFINITE_PARAM),
+                                        1).action is Action.SKIP_BATCH)
+
+    def test_combined_word_routes_by_priority(self):
+        # divergence outranks the transient family in the decision order
+        code = ErrorCode.DIVERGENCE | ErrorCode.NONFINITE_LOSS
+        assert (RecoveryPolicy().decide(_exc(code), 1).action
+                is Action.RESET_OPTIMIZER)
+
+
+# -------------------------------------------------------------- escalation
+class TestEscalation:
+    def test_fourth_repeat_in_window_rolls_back(self):
+        pol = RecoveryPolicy()     # max_soft_retries=3, escalate_window=20
+        actions = [pol.decide(_exc(ErrorCode.NONFINITE_LOSS), s).action
+                   for s in range(1, 6)]
+        assert actions == [Action.SKIP_BATCH, Action.RESTORE_GOOD,
+                           Action.RESTORE_GOOD, Action.ROLLBACK,
+                           Action.ROLLBACK]
+
+    def test_escalation_outranks_divergence(self):
+        pol = RecoveryPolicy()
+        for s in range(1, 4):
+            pol.decide(_exc(ErrorCode.NONFINITE_LOSS), s)
+        assert (pol.decide(_exc(ErrorCode.DIVERGENCE), 4).action
+                is Action.ROLLBACK)
+
+    def test_faults_outside_the_window_never_escalate(self):
+        pol = RecoveryPolicy(escalate_window=10)
+        for i in range(6):
+            d = pol.decide(_exc(ErrorCode.NONFINITE_LOSS), 1 + i * 50)
+            # each fault is the only one in its window: first-repeat routing
+            assert d.action is Action.SKIP_BATCH
+
+    def test_reset_clears_the_repeat_counter(self):
+        pol = RecoveryPolicy()
+        for s in range(1, 4):
+            pol.decide(_exc(ErrorCode.NONFINITE_LOSS), s)
+        pol.reset()
+        assert (pol.decide(_exc(ErrorCode.NONFINITE_LOSS), 4).action
+                is Action.SKIP_BATCH)
+
+    def test_escalation_counts_across_codes(self):
+        # the repeat counter is shared: three stragglers then one NaN → the
+        # NaN is the fourth fault in the window and rolls back
+        pol = RecoveryPolicy()
+        for s in range(1, 4):
+            pol.decide(_exc(ErrorCode.STRAGGLER), s)
+        assert (pol.decide(_exc(ErrorCode.NONFINITE_LOSS), 4).action
+                is Action.ROLLBACK)
+
+
+# -------------------------------------------------------------- hard faults
+class TestHardFaults:
+    def test_comm_corrupted_shrinks_with_ulfm(self):
+        assert (RecoveryPolicy(can_shrink=True)
+                .decide(CommCorruptedError(), 1).action is Action.SHRINK)
+
+    def test_comm_corrupted_rolls_back_without_ulfm(self):
+        # the black-channel path cannot shrink (paper §III-C)
+        assert (RecoveryPolicy(can_shrink=False)
+                .decide(CommCorruptedError(), 1).action is Action.ROLLBACK)
+
+    def test_rank_failed_word_routes_like_a_hard_fault(self):
+        assert (RecoveryPolicy(can_shrink=True)
+                .decide(_exc(ErrorCode.RANK_FAILED), 1).action
+                is Action.SHRINK)
+        assert (RecoveryPolicy(can_shrink=False)
+                .decide(_exc(ErrorCode.RANK_FAILED), 1).action
+                is Action.ROLLBACK)
+
+    def test_hard_faults_never_consume_the_soft_budget(self):
+        pol = RecoveryPolicy()
+        for s in range(1, 10):
+            pol.decide(CommCorruptedError(), s)
+        # soft counter untouched: next soft fault is a first repeat
+        assert (pol.decide(_exc(ErrorCode.NONFINITE_LOSS), 10).action
+                is Action.SKIP_BATCH)
+
+    def test_unhandled_exception_aborts(self):
+        assert (RecoveryPolicy().decide(RuntimeError("?"), 1).action
+                is Action.ABORT)

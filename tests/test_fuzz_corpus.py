@@ -1,0 +1,44 @@
+"""Replay the promoted fuzz corpus as deterministic regression tests.
+
+Every entry under ``tests/fuzz_corpus/`` is a self-contained, seeded
+trajectory (see DESIGN.md §3.6). ``seed``/``regression`` entries must
+replay clean — zero oracle violations and a bit-identical outcome digest.
+``counterexample`` entries (promoted by a fuzz campaign for a then-live
+bug) must keep *reproducing* their violations; when a fix lands, this test
+fails on them — flip the entry's status to ``regression`` and refresh its
+digest to pin the fix.
+"""
+import pathlib
+
+import pytest
+
+from repro.fuzz import load_entry, run_trajectory
+
+CORPUS_DIR = pathlib.Path(__file__).parent / "fuzz_corpus"
+ENTRIES = sorted(CORPUS_DIR.glob("*.json"))
+
+
+def test_corpus_is_seeded():
+    """The repo ships a non-empty corpus: campaigns promote into it and CI
+    replays it — an empty directory means promotion broke."""
+    assert ENTRIES, f"no corpus entries under {CORPUS_DIR}"
+
+
+@pytest.mark.parametrize("path", ENTRIES, ids=lambda p: p.stem)
+def test_corpus_entry_replays(path):
+    entry = load_entry(str(path))
+    res = run_trajectory(entry["trajectory"])
+    if entry["status"] == "counterexample":
+        assert res.failed, (
+            f"{path.name}: the recorded bug no longer reproduces — if a fix "
+            "landed, flip the entry's status to 'regression' and set its "
+            "digest to the new outcome")
+        return
+    assert entry["status"] in ("seed", "regression"), entry["status"]
+    assert res.violations == [], (
+        f"{path.name}: corpus replay violated the oracles: {res.violations}")
+    if entry.get("digest"):
+        assert res.digest() == entry["digest"], (
+            f"{path.name}: outcome digest drifted — the replay is no longer "
+            "bit-for-bit (got {0}, recorded {1})".format(res.digest(),
+                                                         entry["digest"]))
