@@ -2,8 +2,9 @@
 """Bench-regression tripwire over the BENCH_serving.json run history.
 
 Compares the latest recorded serving run against the BEST of the last three
-earlier runs for each engine × scenario cell (and the paged capacity cell,
-when carried) and fails — exit 1 — if tokens/s dropped by more than the
+earlier runs for each engine × scenario cell (and the paged-capacity,
+tracer-overhead and elastic-group cells, when carried) and fails — exit 1 —
+if tokens/s dropped by more than the
 threshold (default 15%). Comparing against the best-of-3 baseline (not just
 the single previous run) means one noisy-but-green draw cannot ratchet the
 baseline down: a slow-but-passing run N doesn't lower the bar run N+1 must
@@ -55,6 +56,16 @@ def _cells(record: dict):
             if isinstance(cell, dict) and isinstance(
                     cell.get("tokens_per_s"), (int, float)):
                 out[f"tracer/{side}"] = float(cell["tokens_per_s"])
+    elastic = record.get("elastic")
+    if isinstance(elastic, dict):
+        # steady + durable ride the tripwire; the join ratio is asserted
+        # inside bench_elastic itself (its best-of reading quantizes on
+        # window-retire bursts, too noisy for a 15% history gate)
+        for side in ("steady", "durable"):
+            cell = elastic.get(side)
+            if isinstance(cell, dict) and isinstance(
+                    cell.get("tokens_per_s"), (int, float)):
+                out[f"elastic/{side}"] = float(cell["tokens_per_s"])
     return out
 
 

@@ -93,6 +93,18 @@ run_trace_smoke() {
 echo "== trace smoke: benchmarks.serving --smoke --trace + trace_tool =="
 stage "trace smoke" run_trace_smoke
 
+# elastic smoke: kill a rank, crash the WHOLE fleet mid-flight, restart from
+# the write-ahead ledger alone, regrow via the non-blocking join — zero
+# drops, bit-exact streams, and the merged two-incarnation trace passes the
+# same post-mortem check; the ledger + trace CI uploads are the artifacts
+# that passed
+run_elastic_smoke() {
+    run_bench_smoke --elastic \
+        && python scripts/trace_tool.py elastic-smoke-trace.json --check
+}
+echo "== elastic smoke: benchmarks.serving --smoke --elastic + trace_tool =="
+stage "elastic smoke" run_elastic_smoke
+
 # time-boxed coverage-guided fuzz sweep over two representative engines; a
 # nonzero exit means a reproducible counterexample was found (and written to
 # tests/fuzz_corpus by a full run — the smoke uses --no-promote so CI never

@@ -24,6 +24,7 @@ Usage:
   python scripts/trace_tool.py trace.json                 # report everything
   python scripts/trace_tool.py trace.json --request 7     # one timeline
   python scripts/trace_tool.py trace.json --faults        # fault report only
+  python scripts/trace_tool.py trace.json --chains        # membership chains
   python scripts/trace_tool.py trace.json --check         # CI validation
 """
 from __future__ import annotations
@@ -60,11 +61,19 @@ def _print_chains(trace: dict) -> None:
         for r in c["reroutes"]:
             a = r.get("args", {})
             tid = a.get("trace_id")
+            if tid is None:
+                tid = a.get("request")
             term = c["terminals"].get(tid)
             status = (term.get("args", {}).get("status")
                       if term is not None else "UNANSWERED")
             print(f"  request {a.get('request')} "
                   f"r{a.get('from_rank')} -> r{a.get('to_rank')}: {status}")
+        for j in c.get("rejoins", ()):
+            a = j.get("args", {})
+            print(f"  rank {a.get('rank')} REJOINED "
+                  f"@{j['ts'] / 1e3:.1f}ms epoch {a.get('epoch')} "
+                  f"({a.get('reason')}, {j.get('dur', 0.0) / 1e3:.1f}ms "
+                  "warm-up to first exchange)")
 
 
 def main(argv=None) -> int:
@@ -75,6 +84,9 @@ def main(argv=None) -> int:
                     help="print one request's timeline (by trace id)")
     ap.add_argument("--faults", action="store_true",
                     help="print only the fault-causality report")
+    ap.add_argument("--chains", action="store_true",
+                    help="print only the group membership chains "
+                         "(kill -> shrink -> reroute -> rejoin)")
     ap.add_argument("--check", action="store_true",
                     help="validate the trace round-trip; exit 1 on problems")
     args = ap.parse_args(argv)
@@ -100,6 +112,10 @@ def main(argv=None) -> int:
 
     if args.faults:
         print(format_fault_report(trace))
+        return 0
+
+    if args.chains:
+        _print_chains(trace)
         return 0
 
     timelines = request_timelines(trace)

@@ -113,6 +113,21 @@ class Comm:
             return None
         return Comm._wrap(self._ctx, new_ctx, self._default_timeout)
 
+    def repair(self, members: Sequence[int], key: object) -> Optional["Comm"]:
+        """Fault-aware non-collective creation/reparation (arXiv 2209.01849):
+        build a communicator over explicit **global** ranks ``members``
+        without a collective over this (possibly corrupted) communicator.
+        Unlike :meth:`split`, the member list may exclude dead ranks and may
+        include ranks that were never members of this communicator — the one
+        primitive that serves both fault-driven shrink *and* grow (rejoin /
+        scale-out). All participants calling with the same ``(members, key)``
+        share the resulting context. Returns None on excluded ranks."""
+        global_members = tuple(int(m) for m in members)
+        new_ctx = self._ctx.repair(global_members, key)
+        if self._ctx.rank not in global_members:
+            return None
+        return Comm._wrap(self._ctx, new_ctx, self._default_timeout)
+
     @classmethod
     def _wrap(cls, ctx: RankCtx, base: CommContext,
               default_timeout: float | None = None) -> "Comm":

@@ -207,6 +207,27 @@ class Transport:
                 self._derived[key] = got
             return got
 
+    def repair(self, members: Sequence[int], key: object) -> CommContext:
+        """Fault-aware **non-collective** communicator creation (the
+        reparation primitive of arXiv 2209.01849): build a context from an
+        explicit global member list without a collective over any parent —
+        so it works when the parent communicator contains dead ranks, and a
+        *joining* rank (not a member of any survivor communicator) can reach
+        the same context as the survivors.
+
+        Every participant calls independently with the same ``(members,
+        key)`` and receives the same context; ``key`` disambiguates repeated
+        repairs over the same membership (the serve group keys it by its
+        ledger epoch)."""
+        with self._cv:
+            members = tuple(members)
+            cache_key = ("repair", members, key)
+            got = self._derived.get(cache_key)
+            if got is None:
+                got = self._new_context(members)
+                self._derived[cache_key] = got
+            return got
+
     # ------------------------------------------------------------------- failure
     def kill(self, rank: int) -> None:
         """Simulate a hard fault of ``rank`` (process/node loss)."""
@@ -545,6 +566,9 @@ class RankCtx:
 
     def dup(self, ctx: CommContext) -> CommContext:
         return self.t.dup(ctx, rank=self.rank)
+
+    def repair(self, members: Sequence[int], key: object) -> CommContext:
+        return self.t.repair(members, key)
 
     def local_rank(self, ctx: CommContext) -> int:
         return ctx.local_rank(self.rank)

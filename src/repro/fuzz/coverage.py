@@ -60,6 +60,10 @@ def reachable_cells() -> frozenset[Cell]:
         cells.add((ErrorCode.PAGE_FAULT.name, "page_reclaim", engine))
     cells.add((ErrorCode.COMM_CORRUPTED.name, "shrink", GROUP_ENGINE))
     cells.add((ErrorCode.RANK_FAILED.name, "reroute", GROUP_ENGINE))
+    # elastic recovery lanes: a full-fleet crash replayed from the durable
+    # ledger, and a dead/spare rank re-admitted via the non-blocking join
+    cells.add((ErrorCode.RANK_FAILED.name, "replay", GROUP_ENGINE))
+    cells.add((ErrorCode.RANK_FAILED.name, "rejoin", GROUP_ENGINE))
     return frozenset(cells)
 
 

@@ -20,8 +20,9 @@ wall clock or global RNG state):
   ladder walks never would.
 
 Explicit caps (not silent): group trajectories carry exactly one ``kill``
-op (sequential multi-kill shrink is out of scope for this corpus) and at
-most ``MAX_OPS`` ops ride any trajectory.
+op (sequential multi-kill shrink is out of scope for this corpus), at most
+one ``restart`` and one ``rejoin`` op ride along with it (crash-replay and
+elastic regrow lanes), and at most ``MAX_OPS`` ops ride any trajectory.
 """
 from __future__ import annotations
 
@@ -85,9 +86,10 @@ class FaultMutator:
     # -------------------------------------------------------------- targeted
     def _targeted(self, rng: np.random.Generator,
                   uncovered: Sequence) -> Trajectory:
-        code_name, _, engine = _pick(rng, uncovered)
+        code_name, action, engine = _pick(rng, uncovered)
         if engine == GROUP_ENGINE:
-            return self._group(rng, note=f"targeted:{code_name}")
+            return self._group(rng, note=f"targeted:{code_name}:{action}",
+                               want=action)
         base = Trajectory(seed=int(rng.integers(1 << 31)), engine=engine,
                           n_requests=_pick(rng, N_REQUESTS[1:]),
                           prompt_len=_pick(rng, PROMPT_LENS),
@@ -142,14 +144,31 @@ class FaultMutator:
         return Op("word", cycle=cycle, slot=slot,
                   step=int(rng.integers(4)), code=code)
 
-    def _group(self, rng: np.random.Generator, *, note: str) -> Trajectory:
+    def _group(self, rng: np.random.Generator, *, note: str,
+               want: Optional[str] = None) -> Trajectory:
+        """One group scenario: a kill, optionally followed by a full-fleet
+        ``restart`` (crash-replay from the ledger) and/or a ``rejoin``
+        (elastic regrow). ``want`` forces the lane a targeted cell needs."""
+        kill_cycle = int(rng.integers(1, 4))
+        restart = want == "replay" or (want is None and rng.random() < 0.35)
+        rejoin = want == "rejoin" or (want is None and rng.random() < 0.35)
+        ops = [Op("kill", cycle=kill_cycle,
+                  slot=int(rng.integers(GROUP_RANKS)))]
+        if restart:
+            # the crash must land before the survivors drain the backlog, so
+            # keep it close behind the kill and carry a heavier load below
+            ops.append(Op("restart",
+                          cycle=kill_cycle + 3 + int(rng.integers(2))))
+        if rejoin:
+            ops.append(Op("rejoin", cycle=int(rng.integers(1, 3)),
+                          slot=int(rng.integers(GROUP_RANKS))))
+        heavy = restart or rejoin
         return Trajectory(
             seed=int(rng.integers(1 << 31)), engine=GROUP_ENGINE,
-            n_requests=_pick(rng, (4, 6)), prompt_len=_pick(rng, PROMPT_LENS),
-            max_new=_pick(rng, MAX_NEWS),
-            ops=[Op("kill", cycle=int(rng.integers(1, 5)),
-                    slot=int(rng.integers(GROUP_RANKS)))],
-            note=f"{note}:group")
+            n_requests=_pick(rng, (8, 10) if heavy else (4, 6)),
+            prompt_len=_pick(rng, PROMPT_LENS),
+            max_new=_pick(rng, (8, 12) if heavy else MAX_NEWS),
+            ops=ops, note=f"{note}:group")
 
     # ---------------------------------------------------------------- mutate
     def mutate(self, parent: Trajectory,

@@ -33,6 +33,9 @@ from __future__ import annotations
 import functools
 import hashlib
 import json
+import os
+import shutil
+import tempfile
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -52,7 +55,7 @@ from ..launch.steps import (
 )
 from ..models import build_model
 from ..obs import postmortem
-from ..obs.trace import Tracer, merge_traces
+from ..obs.trace import Tracer, merge_trace_dicts, merge_traces
 from ..serve.group import ServeGroup
 from ..serve.queue import FAILED, OK, Request
 from ..serve.replica import SERVE_PROBES, Replica
@@ -150,11 +153,13 @@ def get_kit(engine: str) -> EngineKit:
 
 
 @functools.lru_cache(maxsize=None)
-def _group_kit(max_request_retries: int) -> ServeGroup:
+def _group_kit(max_request_retries: int,
+               max_ranks: int = GROUP_RANKS) -> ServeGroup:
     cfg, _ = _env()
-    return ServeGroup(cfg, nranks=GROUP_RANKS, num_slots=2, max_len=32,
-                      window=4, overlap=True, eos_id=None,
-                      max_request_retries=max_request_retries, trace=True)
+    return ServeGroup(cfg, nranks=GROUP_RANKS, max_ranks=max_ranks,
+                      num_slots=2, max_len=32, window=4, overlap=True,
+                      eos_id=None, max_request_retries=max_request_retries,
+                      trace=True)
 
 
 # ----------------------------------------------------------------- injection
@@ -350,37 +355,80 @@ def _run_single(traj: Trajectory, *, reference: dict,
 
 def _run_group(traj: Trajectory, *, reference: dict,
                check: bool = True) -> RunResult:
-    group = _group_kit(traj.max_request_retries)
-    res = RunResult(trajectory=traj)
     kills = traj.ops_of("kill")
+    rejoins = traj.ops_of("rejoin")
+    restarts = traj.ops_of("restart")
+    # a rejoin without a restart needs a spare rank beyond the initial fleet;
+    # after a restart the previously killed rank itself is the spare
+    max_ranks = GROUP_RANKS + (1 if rejoins and not restarts else 0)
+    group = _group_kit(traj.max_request_retries, max_ranks)
+    res = RunResult(trajectory=traj)
     faults = FaultSchedule(
         [FaultSpec(step=op.cycle, kind="kill", rank=op.slot % group.nranks)
          for op in kills], seed=traj.seed)
+    crash_at = restarts[0].cycle if restarts else None
+    joins = sorted(op.cycle for op in rejoins) or None
+    tmp = tempfile.mkdtemp(prefix="fuzz-ledger-")
+    ledger_path = os.path.join(tmp, "ledger.wal")
+    outs = []
+    traces = []
     try:
-        out = group.serve(_requests(traj), faults=faults)
+        # every group trajectory runs durable: the write-ahead log is part of
+        # the production submit path, so the fuzzer must always exercise it
+        out = group.serve(_requests(traj), faults=faults,
+                          ledger_path=ledger_path, crash_at=crash_at,
+                          joins=None if restarts else joins)
+        outs.append(out)
+        traces.append(out.trace())
+        res.responses = dict(out.responses)
+        if restarts:
+            if out.crashed:
+                out2 = group.serve_from_ledger(ledger_path, joins=joins)
+                outs.append(out2)
+                traces.append(out2.trace())
+                res.responses.update(out2.responses)
+                res.cells.add((ErrorCode.RANK_FAILED.name, "replay",
+                               traj.engine))
+            else:
+                # the fleet drained before the crash round — legal, but the
+                # mutator's timing search wants to know the op was dead code
+                res.summary["restart_noop"] = True
     except Exception as exc:
         res.violations.append(f"crash: {type(exc).__name__}: {exc}")
         return res
-    res.responses = dict(out.responses)
-    for rr in out.reports:
-        report = rr.value if rr.exception is None and not rr.killed else None
-        if report is None:
-            continue
-        if report.metrics is not None:
-            res.cells |= _metrics_cells(report.metrics, traj.engine)
-        if any(ev[0] == "shrink" for ev in report.events):
-            res.cells.add((ErrorCode.COMM_CORRUPTED.name, "shrink",
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    for out in outs:
+        for rr in out.reports:
+            report = (rr.value if rr.exception is None and not rr.killed
+                      else None)
+            if report is None:
+                continue
+            if report.metrics is not None:
+                res.cells |= _metrics_cells(report.metrics, traj.engine)
+            if any(ev[0] == "shrink" for ev in report.events):
+                res.cells.add((ErrorCode.COMM_CORRUPTED.name, "shrink",
+                               traj.engine))
+        if out.rerouted:
+            res.cells.add((ErrorCode.RANK_FAILED.name, "reroute",
                            traj.engine))
-    if out.rerouted:
-        res.cells.add((ErrorCode.RANK_FAILED.name, "reroute", traj.engine))
-    if kills and not out.rerouted:
+        if out.joined:
+            res.cells.add((ErrorCode.RANK_FAILED.name, "rejoin",
+                           traj.engine))
+    if kills and not any(out.rerouted for out in outs):
         # a kill with no re-route means the dead rank had already answered
         # everything — legal, but worth noting for the mutator's timing search
         res.summary["kill_noop"] = True
+    if rejoins and not any(out.joined for out in outs):
+        res.summary["rejoin_noop"] = True
     if check:
         _check_outcomes(traj, res.responses, reference, res.violations)
+        # a crash-restart scenario is ONE causal story across two fleet
+        # incarnations: submits from the first pair with terminals from the
+        # second, so the oracle only holds on the merged trace
         res.violations.extend(
-            f"trace: {p}" for p in postmortem.validate(out.trace()))
+            f"trace: {p}" for p in postmortem.validate(
+                merge_trace_dicts(*traces)))
     res.summary.setdefault("statuses", {})
     for r in res.responses.values():
         res.summary["statuses"][r.status] = (

@@ -28,6 +28,14 @@ Op timing model (the injection surfaces of DESIGN.md §3.6):
   (``Replica.preempt_slot``): the zero-drop preemption path.
 * ``kill``    — hard-kill replica rank ``slot`` at serving round ``cycle``
   (ServeGroup engines only): ULFM shrink + ledger re-route.
+* ``restart`` — stop the *whole fleet* at serving round ``cycle`` and replay
+  it from the durable request ledger alone (``serve`` with ``crash_at=`` then
+  ``serve_from_ledger``): the crash-restart zero-drop path. At most one per
+  trajectory — the replayed incarnation is part of the same scenario.
+* ``rejoin``  — summon a spare / previously-killed rank back into the group
+  at round ``cycle`` (the ledger ``joins`` schedule): non-blocking join with
+  background state transfer and epoch re-balance. Lands in the post-restart
+  incarnation when a ``restart`` op rides the same trajectory.
 """
 from __future__ import annotations
 
@@ -35,7 +43,11 @@ import json
 from dataclasses import asdict, dataclass, field, replace
 from typing import Iterable, Optional, Sequence
 
-OP_KINDS = ("word", "poison", "page_table", "preempt", "kill")
+OP_KINDS = ("word", "poison", "page_table", "preempt", "kill", "restart",
+            "rejoin")
+
+#: Ops that only make sense on the multi-replica ULFM engine.
+GROUP_OPS = frozenset({"kill", "restart", "rejoin"})
 
 #: Engine variants a trajectory can target. ``group`` is the multi-replica
 #: ULFM engine; the rest are single-replica serving code paths.
@@ -48,7 +60,8 @@ ENGINES = SINGLE_ENGINES + (GROUP_ENGINE,)
 @dataclass(frozen=True)
 class Op:
     """One injection, fully timed. ``slot`` doubles as the target rank for
-    ``kill`` ops; ``step``/``code`` are only meaningful for ``word`` ops."""
+    ``kill``/``rejoin`` ops (``restart`` stops the whole fleet and ignores
+    it); ``step``/``code`` are only meaningful for ``word`` ops."""
 
     op: str
     cycle: int
@@ -88,10 +101,14 @@ class Trajectory:
         for op in self.ops:
             if not isinstance(op, Op):
                 raise TypeError(f"ops must be Op instances, got {op!r}")
-            if (op.op == "kill") != (self.engine == GROUP_ENGINE):
+            if (op.op in GROUP_OPS) != (self.engine == GROUP_ENGINE):
                 raise ValueError(
-                    f"{op.op!r} op is {'only' if op.op == 'kill' else 'not'} "
+                    f"{op.op!r} op is "
+                    f"{'only' if op.op in GROUP_OPS else 'not'} "
                     "valid on the group engine")
+        if sum(1 for o in self.ops if o.op == "restart") > 1:
+            raise ValueError("at most one restart op per trajectory: the "
+                             "replayed incarnation is the same scenario")
 
     # ----------------------------------------------------------- derived load
     def prompts(self) -> list[tuple]:

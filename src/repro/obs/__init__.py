@@ -27,5 +27,6 @@ from .trace import (  # noqa: F401
     dump_trace,
     event_log_to_events,
     load_trace,
+    merge_trace_dicts,
     merge_traces,
 )

@@ -13,7 +13,9 @@ future fault-injection fuzzer's oracle) wants after a faulted run:
   chain *fault → detection → recovery → re-prefill → first healthy token*.
 * :func:`validate` — the round-trip check the CI trace smoke runs: every
   fault resolves, every traced request reaches exactly one terminal span,
-  every recovery span closes. Returns a list of problems (empty = clean).
+  every recovery span closes, every kill chains to a shrink, and every
+  elastic rejoin chains to a *completed* state transfer. Returns a list of
+  problems (empty = clean).
 
 Everything here is stdlib-only on plain dicts, so ``scripts/trace_tool.py``
 stays a dependency-free CLI.
@@ -127,11 +129,14 @@ def fault_report(trace: dict) -> list[FaultResolution]:
 def group_chains(trace: dict) -> list[dict]:
     """Cross-replica causal chains: one dict per replica kill, linking the
     kill to the ULFM shrink that detected it, the ledger re-routes it caused,
-    and the re-routed requests' terminal spans on the survivors."""
+    the re-routed requests' terminal spans on the survivors, and — when the
+    elastic layer later re-admitted the same rank — the ``replica_join`` span
+    that closed the kill → shrink → rejoin loop."""
     evs = events_of(trace)
     kills = [e for e in evs if e.get("name") == "replica_kill"]
     shrinks = [e for e in evs if e.get("name") == "ulfm_shrink"]
     reroutes = [e for e in evs if e.get("name") == "reroute"]
+    joins = [e for e in evs if e.get("name") == "replica_join"]
     terminals = {_tid_of(e): e for e in evs
                  if e.get("cat") == "request" and e.get("name") == "request"}
     chains = []
@@ -141,13 +146,22 @@ def group_chains(trace: dict) -> list[dict]:
                          and dead not in _args(s).get("survivors", ())]
         chain_routes = [r for r in reroutes
                         if _args(r).get("from_rank") == dead]
+        chain_joins = [j for j in joins if j["ts"] >= k["ts"]
+                       and _args(j).get("rank") == dead]
         routed = {}
         for r in chain_routes:
             tid = _tid_of(r)
+            if tid is None:
+                # re-routed before its first queue accept (e.g. while still
+                # pending in the ledger): no trace id stamped yet, but the
+                # trace id *is* the request id by contract, so the eventual
+                # terminal — possibly in a post-restart incarnation — still
+                # links by id
+                tid = _args(r).get("request")
             routed[tid] = terminals.get(tid)
         chains.append({"kill": k, "dead_rank": dead,
                        "shrinks": chain_shrinks, "reroutes": chain_routes,
-                       "terminals": routed})
+                       "terminals": routed, "rejoins": chain_joins})
     return chains
 
 
@@ -208,6 +222,20 @@ def validate(trace: dict) -> list[str]:
             problems.append(
                 f"replica {chain['dead_rank']} killed but no survivor "
                 "recorded a ulfm_shrink")
+    # every rejoin chains to a completed state transfer: a rank may not serve
+    # on the widened group without having received the weights + page-pool
+    # snapshot first (the background lane must have *finished*, not started)
+    transfers = [e for e in evs if e.get("name") == "state_transfer"]
+    for j in (e for e in evs if e.get("name") == "replica_join"):
+        j_end = j["ts"] + j.get("dur", 0.0)
+        ok = any(t.get("pid") == j.get("pid")
+                 and _args(t).get("complete")
+                 and t["ts"] + t.get("dur", 0.0) <= j_end + 1.0  # 1 µs slack
+                 for t in transfers)
+        if not ok:
+            problems.append(
+                f"replica {_args(j).get('rank', j.get('pid'))} joined without "
+                "a completed state_transfer span preceding the join")
     return problems
 
 

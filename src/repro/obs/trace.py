@@ -25,8 +25,14 @@ request landed on after a ULFM shrink. This module adds that substrate:
   (the error-word history mapped back onto host time: one event per faulted
   ``(step, slot)`` with the exact :class:`~repro.core.errors.ErrorCode`
   word from ``DeviceFuture.fault_codes()``), ``recovery`` (LFLR lane begin
-  → first healthy token), and ``group`` (kill / ULFM shrink / ledger
-  re-route).
+  → first healthy token), and ``group`` (membership lifecycle: kill / ULFM
+  shrink / ledger re-route, plus the elastic events — ``fleet_stop`` when
+  the whole fleet crashes, ``ledger_replay`` when a restart reconstructs
+  the outstanding set from the write-ahead log, ``state_transfer`` (span,
+  ``complete=True`` on success) for the background weights+page-pool copy
+  a joiner receives, ``replica_join`` (span) covering warm-up → transfer →
+  first exchange on the widened group, and ``autoscale`` instants for
+  policy-driven grow/shrink decisions).
 * Export is plain ``trace_event`` JSON (``{"traceEvents": [...]}``): load it
   in Perfetto / ``chrome://tracing``, or feed it to the post-mortem CLI
   (``scripts/trace_tool.py``) which reconstructs per-request timelines and a
@@ -182,6 +188,21 @@ def merge_traces(*tracers: Tracer) -> dict:
     events: list[dict] = []
     for tr in tracers:
         events.extend(tr.events())
+    events.sort(key=lambda e: (e.get("ts", 0.0), e.get("pid", 0)))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def merge_trace_dicts(*traces: dict) -> dict:
+    """Merge already-exported trace objects into one, events re-sorted.
+
+    The crash-restart post-mortem needs this: the pre-crash fleet and the
+    replayed fleet are two ``run_ranks`` invocations with two tracer sets,
+    but one causal story — submits from the first incarnation pair with
+    terminal spans from the second (trace ids survive the write-ahead log),
+    so ``validate`` only passes on the merged object."""
+    events: list[dict] = []
+    for tr in traces:
+        events.extend(tr.get("traceEvents", ()))
     events.sort(key=lambda e: (e.get("ts", 0.0), e.get("pid", 0)))
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 

@@ -573,6 +573,27 @@ class Replica:
             self.metrics.record_response(resp)
         return resp
 
+    def readmit(self, req: Request) -> Optional[Response]:
+        """Idempotent re-admission after a ledger replay (crash-restart).
+
+        A request the write-ahead log proves was already *accepted* re-enters
+        through the negative-sequence requeue lane: admission checks are
+        bypassed (it was admitted once, the zero-drop contract owes it a
+        terminal answer), it sorts ahead of its deadline class, and its
+        original ``arrival_t``/``trace_id`` are preserved so latency spans
+        the whole crash-recovery window and the post-mortem sees one causal
+        chain across both incarnations of the fleet. Requests the log shows
+        as submitted but never accepted go through normal admission."""
+        if req.arrival_t is None:
+            return self.submit(req)
+        self.queue.requeue(req)
+        return None
+
+    def load(self) -> int:
+        """Queued + in-flight requests — the group take-limit / autoscale
+        pressure signal."""
+        return len(self.queue) + self.sched.in_flight()
+
     # ---------------------------------------------------------- fault surface
     def inject_state_fault(self, slot: Optional[int] = None, *,
                            rng: Optional[np.random.Generator] = None

@@ -258,6 +258,12 @@ class ContinuousBatchingScheduler:
     def in_flight(self) -> int:
         return len(self.active_slots())
 
+    def pressure(self) -> dict:
+        """Occupancy snapshot for the group autoscaler: queued requests,
+        busy slots, total slots. Pure bookkeeping — no device sync."""
+        return {"queued": len(self.queue), "active": self.in_flight(),
+                "slots": self.num_slots}
+
     def request(self, slot: int) -> Request:
         req = self.slots[slot].req
         assert req is not None, f"slot {slot} is free"

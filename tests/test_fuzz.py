@@ -137,10 +137,24 @@ class TestMutator:
 
     def test_group_trajectories_carry_exactly_one_kill(self):
         mut = FaultMutator(1, CoverageDB(), engines=(GROUP_ENGINE,))
-        for i in range(5):
+        seen = set()
+        for i in range(12):
             traj = mut.propose(i)
             assert traj.engine == GROUP_ENGINE
-            assert [op.op for op in traj.ops] == ["kill"]
+            kinds = [op.op for op in traj.ops]
+            assert kinds.count("kill") == 1
+            assert kinds.count("restart") <= 1
+            assert kinds.count("rejoin") <= 1
+            assert set(kinds) <= {"kill", "restart", "rejoin"}
+            # a restart lands after the kill: the crash must catch the
+            # shrunken fleet mid-replay of the re-routed backlog
+            kill = next(o for o in traj.ops if o.op == "kill")
+            for op in traj.ops:
+                if op.op == "restart":
+                    assert op.cycle >= kill.cycle + 3
+            seen.update(kinds)
+        # across a dozen seeded proposals every elastic lane gets exercised
+        assert seen == {"kill", "restart", "rejoin"}
 
     def test_mutants_stay_valid(self):
         mut = FaultMutator(2, CoverageDB())

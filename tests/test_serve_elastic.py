@@ -1,0 +1,296 @@
+"""Elastic serve group: durable ledger, crash-restart replay, regrow.
+
+Covers the PR-8 robustness layer from the bottom up:
+
+* the write-ahead log's torn-write contract (a truncated *final* record is a
+  legal crash artefact and is discarded; the same damage mid-log is fatal),
+* compaction bounding the log while preserving replay,
+* the queue's ahead-of-class requeue ordering across repeated
+  requeue/re-route cycles and across a ledger-replay re-admission,
+* the autoscaler's hysteresis (grow on sustained backlog, shrink on idle,
+  cooldown between decisions, floor on the member count), and
+* the end-to-end acceptance story: kill a rank mid-flight, stop the whole
+  fleet, restart from the ledger alone, regrow to full size via the
+  non-blocking join — zero drops, every stream bit-exact against a clean
+  run, and the merged two-incarnation trace passes the post-mortem check.
+"""
+import json
+import os
+from types import SimpleNamespace
+
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.faults import FaultSchedule, FaultSpec
+from repro.obs import postmortem
+from repro.obs.trace import NULL_TRACER, merge_trace_dicts
+from repro.serve.group import AutoscalePolicy, ServeGroup
+from repro.serve.ledger import (
+    GroupLedger,
+    LedgerCorrupt,
+    WriteAheadLog,
+    replay,
+    request_record,
+    response_record,
+)
+from repro.serve.queue import OK, Request, RequestQueue, Response
+
+
+def _req(i, max_new=8):
+    return Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=max_new)
+
+
+# ------------------------------------------------------------------- the WAL
+class TestWriteAheadLog:
+    def test_torn_final_record_discarded_not_fatal(self, tmp_path):
+        path = str(tmp_path / "ledger.wal")
+        wal = WriteAheadLog(path)
+        for i in range(3):
+            wal.append(request_record(_req(i)))
+        wal.close()
+        # crash mid-write: chop the final record in half
+        size = os.path.getsize(path)
+        with open(path, "r+") as f:
+            f.truncate(size - 20)
+        rep = replay(path)
+        assert rep.torn == 1
+        assert sorted(rep.requests) == [0, 1]
+        assert [r.id for r in rep.outstanding()] == [0, 1]
+
+    def test_reopen_truncates_torn_tail_and_continues(self, tmp_path):
+        path = str(tmp_path / "ledger.wal")
+        wal = WriteAheadLog(path)
+        for i in range(3):
+            wal.append(request_record(_req(i)))
+        wal.close()
+        with open(path, "r+") as f:
+            f.truncate(os.path.getsize(path) - 20)
+        # the restart reopens the log: the garbage tail must be gone so the
+        # continued log replays with zero torn records
+        wal2 = WriteAheadLog(path)
+        wal2.append(request_record(_req(7)))
+        wal2.close()
+        rep = replay(path)
+        assert rep.torn == 0
+        assert sorted(rep.requests) == [0, 1, 7]
+
+    def test_midfile_corruption_is_fatal(self, tmp_path):
+        path = str(tmp_path / "ledger.wal")
+        wal = WriteAheadLog(path)
+        for i in range(3):
+            wal.append(request_record(_req(i)))
+        wal.close()
+        lines = open(path).read().splitlines()
+        # valid JSON, wrong checksum: an fsync-acknowledged record that no
+        # longer matches its CRC is damage, not a crash artefact
+        assert '"kind":"submit"' in lines[1]
+        lines[1] = lines[1].replace('"kind":"submit"', '"kind":"sabmit"')
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        with pytest.raises(LedgerCorrupt):
+            replay(path)
+
+    def test_compaction_bounds_log_and_preserves_replay(self, tmp_path):
+        path = str(tmp_path / "ledger.wal")
+        reqs = [_req(i) for i in range(20)]
+        led = GroupLedger(reqs, ranks=(0, 1),
+                          wal=WriteAheadLog(path, compact_every=8))
+        for rank in (0, 1):
+            led.take(rank)
+        for i in range(16):
+            led.complete(Response(id=i, status=OK, tokens=(1, 2), replica=0))
+        led.wal.close()
+        # 20 submits + epoch + routes + 16 retires would be 50+ records; the
+        # compactor collapsed the history into a bounded snapshot tail
+        n_lines = sum(1 for _ in open(path))
+        assert n_lines <= 16
+        rep = replay(path)
+        assert sorted(rep.responses) == list(range(16))
+        assert [r.id for r in rep.outstanding()] == [16, 17, 18, 19]
+        assert rep.members == (0, 1)
+
+
+# ------------------------------------------------------- requeue ordering
+class TestRequeueOrdering:
+    def test_ahead_of_class_across_repeated_cycles(self):
+        q = RequestQueue()
+        for i in range(8):
+            assert q.submit(_req(i)) is None
+        assigned: list[int] = []     # every ahead-of-class key ever handed out
+        for _ in range(5):           # repeated requeue/re-route cycles
+            a, b = q.pop(), q.pop()
+            q.requeue(b)
+            q.requeue(a)
+            # negative-sequence keys: unique within the heap and never reused
+            seqs = [entry[1] for entry in q._heap]
+            assert len(seqs) == len(set(seqs))
+            for s in (s for s in seqs if s < 0):
+                if s not in assigned:
+                    assigned.append(s)
+            assert len(assigned) == len(set(assigned))
+            # newest requeue pops first, ahead of every plain submit
+            got = q.pop()
+            assert got.id == a.id
+            q.requeue(got)
+        # after all the churn, every request is still exactly once in line
+        drained = []
+        while len(q):
+            drained.append(q.pop().id)
+        assert sorted(drained) == list(range(8))
+
+    def test_replay_readmission_keeps_requeued_ahead(self):
+        q1 = RequestQueue()
+        reqs = [_req(i) for i in range(4)]
+        for r in reqs:
+            q1.submit(r)
+        # crash: a fresh incarnation re-admits the replayed (already
+        # arrival-stamped) requests via requeue — the Replica.readmit path —
+        # then takes brand-new submissions on top
+        q2 = RequestQueue()
+        for r in reqs:
+            assert r.arrival_t is not None
+            q2.requeue(r)
+        fresh = _req(99)
+        q2.submit(fresh)
+        order = [q2.pop().id for _ in range(5)]
+        assert order[-1] == 99               # new work waits its turn
+        assert sorted(order[:4]) == [0, 1, 2, 3]
+
+
+# ------------------------------------------------------------- group fixture
+@pytest.fixture(scope="module")
+def group():
+    return ServeGroup(smoke_config("recurrentgemma-2b"), 3, max_ranks=4,
+                      num_slots=2, max_len=48, window=4, overlap=True,
+                      trace=True)
+
+
+# --------------------------------------------------------------- autoscaler
+class TestAutoscaler:
+    def _tick(self, group, led, pol, round_i, report):
+        group._autoscale_tick(led, pol, None, round_i, NULL_TRACER, report)
+
+    def test_grows_only_on_sustained_backlog(self, group):
+        led = GroupLedger([_req(i) for i in range(8)], ranks=(0, 1),
+                          spares=(2,))
+        pol = AutoscalePolicy(queue_high=2, grow_sustain=3, cooldown=0)
+        report = SimpleNamespace(events=[])
+        for r in range(2):           # pressure, but not sustained yet
+            self._tick(group, led, pol, r, report)
+            assert led.autoscale_events == []
+        self._tick(group, led, pol, 2, report)
+        assert led.autoscale_events == [
+            {"round": 2, "action": "grow", "rank": 2}]
+        assert led.summoned(2) == "autoscale"
+        # spares exhausted: continued pressure cannot over-grow
+        for r in range(3, 8):
+            self._tick(group, led, pol, r, report)
+        assert len(led.autoscale_events) == 1
+
+    def test_cooldown_separates_grow_decisions(self, group):
+        led = GroupLedger([_req(i) for i in range(8)], ranks=(0, 1),
+                          spares=(2, 3))
+        pol = AutoscalePolicy(queue_high=2, grow_sustain=1, cooldown=10)
+        report = SimpleNamespace(events=[])
+        for r in range(10):
+            self._tick(group, led, pol, r, report)
+        assert [e["rank"] for e in led.autoscale_events] == [2]
+        self._tick(group, led, pol, 10, report)     # cooldown elapsed
+        assert [e["rank"] for e in led.autoscale_events] == [2, 3]
+
+    def test_shrinks_on_idle_down_to_the_floor(self, group):
+        led = GroupLedger([_req(i) for i in range(6)], ranks=(0, 1, 2))
+        for rank in (0, 1, 2):
+            led.take(rank)           # backlog drained, work still in flight
+        pol = AutoscalePolicy(queue_high=2, shrink_idle=3, cooldown=0,
+                              min_ranks=2)
+        report = SimpleNamespace(events=[])
+        for r in range(2):
+            self._tick(group, led, pol, r, report)
+            assert led.leaving is None
+        self._tick(group, led, pol, 2, report)
+        assert led.leaving == 2      # highest non-leader rank drains out
+        assert led.autoscale_events == [
+            {"round": 2, "action": "shrink", "rank": 2}]
+        # one graceful leave at a time, and never below the floor
+        for r in range(3, 8):
+            self._tick(group, led, pol, r, report)
+        assert len(led.autoscale_events) == 1
+        led2 = GroupLedger([_req(0)], ranks=(0, 1))
+        led2.take(0), led2.take(1)
+        report2 = SimpleNamespace(events=[])
+        for r in range(8):
+            self._tick(group, led2, pol, r, report2)
+        assert led2.leaving is None and led2.autoscale_events == []
+
+
+# ---------------------------------------------------------- join/drain race
+class TestJoinDrainRace:
+    def test_scheduled_join_survives_full_drain(self, group):
+        # a tiny workload drains long before the summoned spare finishes its
+        # (stretched) state transfer; the survivors must hold the final close
+        # at the pending-join / stale-epoch gate until the join lands.
+        # Regression: the join's epoch proposal used to race the close — a
+        # survivor whose exchange pre-dated the proposal saw no pending join
+        # and a stale agreed epoch, closed, and stranded the joiner.
+        old = group.transfer_chunks
+        group.transfer_chunks = 60          # ~120 ms, many idle gate rounds
+        try:
+            res = group.serve([_req(i, max_new=4) for i in range(4)],
+                              joins=[1])
+        finally:
+            group.transfer_chunks = old
+        assert sorted(res.responses) == list(range(4))
+        assert all(r.ok for r in res.responses.values())
+        assert 3 in res.joined
+        names = [e["name"] for e in res.trace()["traceEvents"]]
+        assert "replica_join" in names      # the join truly completed
+        assert "state_transfer" in names
+
+
+# ------------------------------------------------------------ the whole story
+class TestCrashReplayRegrow:
+    def test_kill_crash_replay_regrow_end_to_end(self, group, tmp_path):
+        path = str(tmp_path / "ledger.wal")
+        mk = lambda: [_req(i, max_new=10) for i in range(30)]
+        clean = group.serve(mk())
+        assert all(r.ok for r in clean.responses.values())
+
+        # act 1: rank 2 dies at round 2, then the WHOLE fleet stops at
+        # round 5 — only the fsync'd ledger survives
+        r1 = group.serve(
+            mk(), faults=FaultSchedule(
+                [FaultSpec(step=2, kind="kill", rank=2)]),
+            ledger_path=path, crash_at=5)
+        assert r1.crashed
+        assert len(r1.responses) < 30
+
+        # act 2: a new incarnation restarts from the ledger alone, replays
+        # the outstanding set onto the survivors, and regrows to 3 ranks by
+        # re-admitting the killed rank through the non-blocking join
+        r2 = group.serve_from_ledger(path, joins=[1])
+        merged_responses = {**r1.responses, **r2.responses}
+        assert sorted(merged_responses) == list(range(30))       # zero drops
+        assert all(r.ok for r in merged_responses.values())
+        assert 2 in r2.joined
+        assert r2.epoch >= 2         # kill-shrink epoch + join epoch
+        assert r2.replayed           # requests re-admitted from the ledger
+
+        # bit-exactness: the crash, the replay and the regrow are invisible
+        # in the token streams
+        for rid, resp in merged_responses.items():
+            assert tuple(resp.tokens) == tuple(clean.responses[rid].tokens), (
+                f"request {rid} diverged from the clean run")
+
+        # one causal story across both incarnations: the merged trace passes
+        # the same check `trace_tool.py --check` runs, and the kill chains
+        # through the shrink to the rejoin
+        merged = merge_trace_dicts(r1.trace(), r2.trace())
+        assert postmortem.validate(merged) == []
+        chains = postmortem.group_chains(merged)
+        assert any(c["dead_rank"] == 2 and c["shrinks"] and c["rejoins"]
+                   for c in chains)
+        names = {e["name"] for e in merged["traceEvents"]
+                 if e.get("cat") == "group"}
+        assert {"replica_kill", "ulfm_shrink", "fleet_stop", "ledger_replay",
+                "state_transfer", "replica_join"} <= names
