@@ -34,7 +34,16 @@ prefill stalls dominate. Rows (name, derived, us):
     survivor tok/s *during* a non-blocking replica join must stay ≥ 0.9× the
     survivors' steady rate (asserted — the join is a background lane, not a
     stall), plus the fleet tok/s with the fsync'd write-ahead ledger on
-    (``record["elastic"]``, all guarded by ``bench_gate.py``).
+    (``record["elastic"]``, all guarded by ``bench_gate.py``);
+  * serve_window8_tp2_* — tensor-parallel replica cells (ISSUE 9, DESIGN
+    §3.8): the ``tp=2`` engine (storage sharded over the "model" mesh axis,
+    per-shard error words OR-folded at retirement) on the qwen3 smoke config,
+    steady + faulted, skipped when fewer than 2 devices are visible (CI
+    forces them with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``).
+
+Every ``Replica``/``ServeGroup`` here is built through one validated
+:class:`repro.serve.EngineConfig` — the single construction path the bench
+shares with the tests and the fuzzer.
 
 ``python -m benchmarks.run --json`` appends the record to the run history in
 ``BENCH_serving.json`` (perf trajectory across PRs); ``python -m
@@ -44,10 +53,13 @@ benchmarks.serving --smoke`` is the CI decode-hotpath gate, ``--smoke
 ``--smoke --spec`` the CI speculative gate (bit-exact steady+faulted +
 non-zero draft acceptance), ``--smoke --trace`` the CI trace gate (traced
 faulted traffic is token-bit-exact vs untraced, the dumped trace round-trips
-through ``scripts/trace_tool.py --check``) and ``--smoke --elastic`` the CI
+through ``scripts/trace_tool.py --check``), ``--smoke --elastic`` the CI
 elastic gate (kill a rank, crash the whole fleet mid-flight, restart from
 the write-ahead ledger alone, regrow via the non-blocking join — zero
-drops, bit-exact streams, merged two-incarnation trace validates).
+drops, bit-exact streams, merged two-incarnation trace validates) and
+``--smoke --tp`` the CI tensor-parallel gate (tp=2 token-bit-exact vs the
+single-device engine steady AND under a one-shard injection, shard loss
+inside a group shrinks with zero drops, dumped trace validates).
 """
 from __future__ import annotations
 
@@ -56,8 +68,10 @@ import os
 import shutil
 import time
 
+import jax
+
 from repro.configs import smoke_config
-from repro.serve import Replica, Request
+from repro.serve import EngineConfig, Replica, Request
 
 N_REQUESTS = 12
 PROMPT_LEN = 16     # long prompts: admission/recovery prefill is real work
@@ -146,6 +160,16 @@ PAGED_SLOTS = 4               # paged engine: 2× the slots, same pool bytes
 PAGED_MIXED_PROMPTS = (16, 1024, 32, 48, 64, 128, 16, 256, 32, 512, 24, 96)
 PAGED_MAX_NEW = 16
 
+# --- tensor-parallel cells (ISSUE 9): the tp=2 engine on the qwen3 smoke
+# config (the arch the TP test suite shards), steady + faulted. Skipped —
+# loudly, in the record — when fewer than TP devices are visible; CI forces
+# host devices so the cells always ride the tracked history there.
+TP = 2
+TP_ARCH = "qwen3-1.7b"
+TP_ENGINE = (f"window{WINDOW}_tp{TP}",
+             dict(window=WINDOW, overlap=True, tp=TP))
+TP_RUN_KW = dict(arch=TP_ARCH)
+
 
 def _serve_once(engine_kw: dict, fault_every: int = 0,
                 n_requests: int = N_REQUESTS, max_new: int = MAX_NEW,
@@ -158,8 +182,11 @@ def _serve_once(engine_kw: dict, fault_every: int = 0,
         cfg = cfg.replace(num_layers=num_layers)
     # generous retry budget: the bench measures recovery *throughput*, and a
     # round-robin injection stream must not exhaust one request's retries
-    rep = Replica(cfg, num_slots=num_slots, max_len=max_len,
-                  max_request_retries=6, tracer=tracer, **engine_kw)
+    rep = Replica(cfg, config=EngineConfig(num_slots=num_slots,
+                                           max_len=max_len,
+                                           max_request_retries=6,
+                                           **engine_kw),
+                  tracer=tracer)
     # every compile (decode path + LFLR prefill buckets) outside the timed
     # region, and fresh metrics so warm-up never pollutes the percentiles
     rep.warmup(max_new=max_new)
@@ -205,9 +232,10 @@ def _serve_mixed(prompts, *, paged: bool, num_slots: int, max_len: int,
     paged traffic is gated by ``--smoke --paged`` and tests — this cell
     measures capacity.)"""
     cfg = smoke_config(PAGED_ARCH)
-    rep = Replica(cfg, num_slots=num_slots, max_len=max_len, window=WINDOW,
-                  overlap=True, max_request_retries=6, paged=paged,
-                  page_size=PAGED_PAGE, page_budget=page_budget)
+    rep = Replica(cfg, config=EngineConfig(
+        num_slots=num_slots, max_len=max_len, window=WINDOW, overlap=True,
+        max_request_retries=6, paged=paged, page_size=PAGED_PAGE,
+        page_budget=page_budget))
     rep.warmup(max_new=max_new)
     for i, plen in enumerate(prompts):
         rej = rep.submit(Request(
@@ -399,9 +427,11 @@ def bench_elastic():
     from repro.serve import ServeGroup
 
     group = ServeGroup(smoke_config("recurrentgemma-2b"), ELASTIC_RANKS,
-                       max_ranks=ELASTIC_MAX_RANKS, num_slots=NUM_SLOTS,
-                       max_len=MAX_LEN, window=WINDOW, overlap=True,
-                       max_request_retries=6, trace=True,
+                       config=EngineConfig(num_slots=NUM_SLOTS,
+                                           max_len=MAX_LEN, window=WINDOW,
+                                           overlap=True,
+                                           max_request_retries=6, trace=True),
+                       max_ranks=ELASTIC_MAX_RANKS,
                        transfer_chunks=ELASTIC_TRANSFER_CHUNKS)
     best = {"ratio": 0.0, "during": 0.0, "steady": 0.0, "durable": 0.0}
     wal_stats: dict = {}
@@ -478,7 +508,8 @@ def bench_all():
                    "spec_draft_layers": SPEC_DRAFT_LAYERS,
                    "spec_n_requests": SPEC_N_REQUESTS,
                    "spec_max_new": SPEC_MAX_NEW,
-                   "spec_max_len": SPEC_MAX_LEN},
+                   "spec_max_len": SPEC_MAX_LEN,
+                   "tp": TP, "tp_arch": f"{TP_ARCH}(smoke)"},
         "engines": {},
     }
     cells = [(engine, engine_kw, label, fault_every, {})
@@ -489,6 +520,16 @@ def bench_all():
               for engine, engine_kw in SPEC_ENGINES
               for label, fault_every in (("steady", 0),
                                          ("faulted", FAULT_EVERY))]
+    tp_ok = len(jax.devices()) >= TP
+    record["tp_skipped"] = not tp_ok
+    if tp_ok:
+        cells += [(TP_ENGINE[0], TP_ENGINE[1], label, fault_every, TP_RUN_KW)
+                  for label, fault_every in (("steady", 0),
+                                             ("faulted", FAULT_EVERY))]
+    else:
+        print(f"# tp cells skipped: {len(jax.devices())} device(s) < tp={TP} "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{TP})")
     best: dict[str, dict] = {}
     for trial in range(max(N_TRIALS, N_TRIALS_FAULTED)):
         for engine, engine_kw, label, fault_every, run_kw in cells:
@@ -629,9 +670,9 @@ def smoke_paged(window: int = WINDOW) -> None:
     max_len, page = 64, 16
 
     def serve(paged, inject_at=None):
-        rep = Replica(cfg, num_slots=2, max_len=max_len, window=window,
-                      overlap=True, max_request_retries=6, paged=paged,
-                      page_size=page)
+        rep = Replica(cfg, config=EngineConfig(
+            num_slots=2, max_len=max_len, window=window, overlap=True,
+            max_request_retries=6, paged=paged, page_size=page))
         reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(9)),
                         max_new_tokens=16) for i in range(5)]
         for r in reqs:
@@ -669,9 +710,10 @@ def smoke_paged(window: int = WINDOW) -> None:
     prompts = (4, 40, 8, 12, 6, 32, 10, 8)
 
     def mixed(paged, slots):
-        rep = Replica(cfg, num_slots=slots, max_len=max_len, window=window,
-                      overlap=True, paged=paged, page_size=page,
-                      page_budget=budget_pages if paged else None)
+        rep = Replica(cfg, config=EngineConfig(
+            num_slots=slots, max_len=max_len, window=window, overlap=True,
+            paged=paged, page_size=page,
+            page_budget=budget_pages if paged else None))
         for i, plen in enumerate(prompts):
             assert rep.submit(Request(
                 id=i, prompt=tuple(3 + i + j for j in range(plen)),
@@ -703,10 +745,10 @@ def smoke_spec(window: int = WINDOW) -> None:
     cfg = smoke_config(SPEC_ARCH)
 
     def serve(speculate, inject):
-        rep = Replica(cfg, num_slots=2, max_len=MAX_LEN, window=window,
-                      overlap=True, max_request_retries=6,
-                      speculate=speculate, draft_len=SPEC_DRAFT_LEN,
-                      draft_layers=SPEC_DRAFT_LAYERS, seed=0)
+        rep = Replica(cfg, config=EngineConfig(
+            num_slots=2, max_len=MAX_LEN, window=window, overlap=True,
+            max_request_retries=6, speculate=speculate,
+            draft_len=SPEC_DRAFT_LEN, draft_layers=SPEC_DRAFT_LAYERS), seed=0)
         reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(9)),
                         max_new_tokens=16) for i in range(5)]
         for r in reqs:
@@ -759,8 +801,9 @@ def smoke_trace(window: int = WINDOW,
     n_requests = 6
 
     def serve(tracer):
-        rep = Replica(cfg, num_slots=2, max_len=MAX_LEN, window=window,
-                      overlap=True, max_request_retries=6, tracer=tracer)
+        rep = Replica(cfg, config=EngineConfig(
+            num_slots=2, max_len=MAX_LEN, window=window, overlap=True,
+            max_request_retries=6), tracer=tracer)
         reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(9)),
                         max_new_tokens=16) for i in range(n_requests)]
         for r in reqs:
@@ -829,9 +872,10 @@ def smoke_elastic(window: int = WINDOW,
         if os.path.exists(stale):
             os.remove(stale)     # a prior run's WAL must not replay into ours
     cfg = smoke_config("recurrentgemma-2b")
-    group = ServeGroup(cfg, 3, max_ranks=3, num_slots=2, max_len=MAX_LEN,
-                       window=window, overlap=True, max_request_retries=6,
-                       trace=True)
+    group = ServeGroup(cfg, 3, max_ranks=3,
+                       config=EngineConfig(num_slots=2, max_len=MAX_LEN,
+                                           window=window, overlap=True,
+                                           max_request_retries=6, trace=True))
     n = 24
     mk = lambda: [Request(id=i, prompt=tuple(5 + i + j for j in range(8)),
                           max_new_tokens=12) for i in range(n)]
@@ -864,6 +908,107 @@ def smoke_elastic(window: int = WINDOW,
           f"-> {out_path}, {ledger_path}")
 
 
+def smoke_tp(window: int = WINDOW,
+             out_path: str = "tp-smoke-trace.json") -> None:
+    """CI tensor-parallel gate: the ISSUE-9 acceptance story at smoke scale.
+
+    (1) *Bit-exactness*: the ``tp=2`` engine (storage sharded over the
+    "model" mesh axis, compute replicated inside the shard_mapped window,
+    per-shard error words OR-folded at retirement) must emit token-bit-exact
+    streams vs the single-device window engine on identical traffic — steady,
+    AND with a ``STATE_FAULT`` word injected on *one shard only* (the fold
+    must latch it on every shard and LFLR must recover to the clean streams).
+    (2) *Shard loss*: inside a 2-rank ServeGroup, losing one shard of rank 1
+    is a hard fault of the whole replica — RANK_FAILED → ULFM shrink →
+    re-route, zero dropped requests — and the dumped group trace passes the
+    post-mortem check, shard-fanout rules included (``trace_tool.py --check``
+    re-validates the artifact this gate writes)."""
+    import numpy as np
+
+    from repro.core.errors import ErrorCode
+    from repro.core.faults import FaultSchedule, FaultSpec
+    from repro.obs import validate
+    from repro.serve import ServeGroup
+
+    ndev = len(jax.devices())
+    assert ndev >= TP, (
+        f"tp={TP} smoke needs {TP} devices, found {ndev} — run with "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count={TP}")
+    cfg = smoke_config(TP_ARCH)
+    n_requests = 4
+
+    def shard_injector(shard, code, at=3):
+        # one-shard word injection at dispatch `at`, window step 1, slot 0:
+        # the OR-fold must make it indistinguishable from an all-shard fault
+        def inject(index, shape):
+            if index != at or len(shape) != 3:
+                return None
+            w = np.zeros(shape, np.uint32)
+            w[shard, 1, 0] = np.uint32(code)
+            return w
+        return inject
+
+    def serve(tp, injector=None):
+        rep = Replica(cfg, config=EngineConfig(
+            num_slots=2, max_len=MAX_LEN, window=window, overlap=True,
+            max_request_retries=6, tp=tp), fault_injector=injector)
+        reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(9)),
+                        max_new_tokens=16) for i in range(n_requests)]
+        for r in reqs:
+            assert rep.submit(r) is None
+        out, steps = {}, 0
+        while not rep.idle():
+            for resp in rep.step():
+                out[resp.id] = resp
+            steps += 1
+            assert steps < 2000
+        assert all(r.status == "ok" for r in out.values())
+        return rep, out
+
+    _, base = serve(1)
+    for label, injector in (
+            ("steady", None),
+            ("faulted", shard_injector(0, int(ErrorCode.STATE_FAULT)))):
+        rep, got = serve(TP, injector)
+        assert sorted(got) == sorted(base)
+        for i in base:
+            assert got[i].tokens == base[i].tokens, (
+                f"tp={TP} engine diverged from single-device on {label} "
+                f"traffic (request {i})")
+        counts = rep.metrics.fault_counts()
+        if injector is None:
+            assert not counts, f"steady tp run recorded faults: {counts}"
+        else:
+            assert counts.get("STATE_FAULT") == 1, (
+                f"one-shard injection did not latch exactly once: {counts}")
+        print(f"tp smoke ({label}): bit-exact over {len(base)} requests, "
+              f"tp={TP}")
+
+    # shard loss inside a group: RANK_FAILED -> shrink -> re-route, no drops
+    group = ServeGroup(cfg, 2, config=EngineConfig(
+        num_slots=2, max_len=48, window=window, overlap=True,
+        max_request_retries=6, tp=TP, trace=True))
+    reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(8)),
+                    max_new_tokens=12) for i in range(6)]
+    res = group.serve(reqs, faults=FaultSchedule(
+        [FaultSpec(step=1, kind="shard_kill", rank=1, shard=1)]))
+    assert sorted(res.responses) == list(range(len(reqs))), (
+        "dropped requests across the shard loss")
+    assert all(r.ok for r in res.responses.values())
+    assert res.rerouted, "no requests were re-routed off the dead replica"
+    trace = res.trace()
+    names = {e.get("name") for e in trace["traceEvents"]}
+    assert {"shard_loss", "replica_kill", "ulfm_shrink", "reroute"} <= names, (
+        f"shard-loss causality chain incomplete: {sorted(names)}")
+    problems = validate(trace)
+    assert not problems, problems
+    with open(out_path, "w") as f:
+        json.dump(trace, f)
+    print(f"tp smoke (shard loss): {len(res.responses)}/{len(reqs)} answered "
+          f"after losing shard 1 of rank 1 ({len(res.rerouted)} re-routed) "
+          f"-> {out_path}, validate OK")
+
+
 if __name__ == "__main__":
     import sys
 
@@ -878,6 +1023,8 @@ if __name__ == "__main__":
             smoke_trace()
         elif "--elastic" in sys.argv:
             smoke_elastic()
+        elif "--tp" in sys.argv:
+            smoke_tp()
         else:
             smoke()
     else:

@@ -1,7 +1,16 @@
 """Root conftest: make the src-layout package importable without installation,
-so a bare ``python -m pytest -x -q`` works (no ``PYTHONPATH=src`` needed)."""
+so a bare ``python -m pytest -x -q`` works (no ``PYTHONPATH=src`` needed).
+
+Also forces two simulated host devices (before any jax import — conftest is
+loaded first) so the tensor-parallel serve tests (``tests/test_serve_tp.py``)
+can build a 2-way "model" mesh in-process. Single-device suites are unaffected:
+their arrays live on device 0 and the computations are identical. A caller who
+already set ``XLA_FLAGS`` wins (the TP tests then skip if fewer than 2 devices
+come up); the subprocess-based multi-device tests override it themselves."""
 import os
 import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
 
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:

@@ -61,13 +61,14 @@ from repro.obs import (  # noqa: E402
     merge_traces,
     validate,
 )
-from repro.serve import Replica, Request, ServeGroup  # noqa: E402
+from repro.serve import EngineConfig, Replica, Request, ServeGroup  # noqa: E402
 
 
 def act1_soft_fault(cfg):
     print("=== Act 1: decode windows + per-sequence LFLR on one replica ===")
     tracer = Tracer()
-    replica = Replica(cfg, num_slots=4, max_len=48, window=4, tracer=tracer)
+    replica = Replica(cfg, config=EngineConfig(num_slots=4, max_len=48,
+                                               window=4), tracer=tracer)
     for i in range(6):      # 6 requests onto 4 slots: backfill is exercised
         rej = replica.submit(Request(id=i, prompt=(11 + i, 22 + i, 33 + i),
                                      max_new_tokens=12))
@@ -111,7 +112,8 @@ def act1_soft_fault(cfg):
 
 def act2_hard_fault(cfg):
     print("=== Act 2: replica kill -> shrink + re-route on a ServeGroup ===")
-    group = ServeGroup(cfg, 3, num_slots=2, max_len=48, trace=True)
+    group = ServeGroup(cfg, 3, config=EngineConfig(num_slots=2, max_len=48,
+                                                   trace=True))
     requests = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=6)
                 for i in range(9)]
     result = group.serve(requests, faults=FaultSchedule(
@@ -160,8 +162,9 @@ def act3_crash_replay_regrow(cfg):
     ledger_path = "serve-ledger.wal"
     if os.path.exists(ledger_path):
         os.remove(ledger_path)      # a stale log must not replay into this run
-    group = ServeGroup(cfg, 3, max_ranks=3, num_slots=2, max_len=48,
-                       trace=True)
+    group = ServeGroup(cfg, 3, max_ranks=3,
+                       config=EngineConfig(num_slots=2, max_len=48,
+                                           trace=True))
     mk = lambda: [Request(id=i, prompt=(5 + i, 6 + i, 7 + i),
                           max_new_tokens=6) for i in range(12)]
     clean = group.serve(mk())

@@ -105,6 +105,17 @@ run_elastic_smoke() {
 echo "== elastic smoke: benchmarks.serving --smoke --elastic + trace_tool =="
 stage "elastic smoke" run_elastic_smoke
 
+# tensor-parallel smoke: tp=2 on forced host devices — token-bit-exact vs
+# the single-device engine (steady + one-shard injection), shard loss in a
+# group shrinks with zero drops, and the dumped trace re-validates from disk
+run_tp_smoke() {
+    XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}" \
+        run_bench_smoke --tp \
+        && python scripts/trace_tool.py tp-smoke-trace.json --check
+}
+echo "== tp smoke: benchmarks.serving --smoke --tp + trace_tool =="
+stage "tp smoke" run_tp_smoke
+
 # time-boxed coverage-guided fuzz sweep over two representative engines; a
 # nonzero exit means a reproducible counterexample was found (and written to
 # tests/fuzz_corpus by a full run — the smoke uses --no-promote so CI never

@@ -30,6 +30,7 @@ from .errors import (  # noqa: F401
     ReproError,
     RevokedError,
     TimeoutError_,
+    strip_codes,
 )
 from .faults import FaultSchedule, FaultSpec  # noqa: F401
 from .future import Future  # noqa: F401

@@ -40,6 +40,7 @@ from .errors import (
     PropagatedError,
     RankError,
     TimeoutError_,
+    strip_codes,
 )
 
 # static capacity of the device-side (rank, code) table; errors beyond this are
@@ -233,7 +234,7 @@ class DeviceFuture:
         if self.history is None:
             return None
         hist = np.asarray(jax.device_get(self.history)).astype(np.uint32)
-        hist &= np.uint32(~np.uint32(ignore))
+        hist = strip_codes(hist, ignore)
         bad = hist != 0
         return np.where(bad.any(axis=0), bad.argmax(axis=0), -1).astype(np.int64)
 
@@ -251,7 +252,7 @@ class DeviceFuture:
         if self.history is None:
             return None
         hist = np.asarray(jax.device_get(self.history)).astype(np.uint32)
-        hist &= np.uint32(~np.uint32(ignore))
+        hist = strip_codes(hist, ignore)
         out = np.zeros(hist.shape[1], np.uint32)
         for row in hist:
             out |= row

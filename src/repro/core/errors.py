@@ -25,6 +25,8 @@ import enum
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
+import numpy as np
+
 
 class ErrorCode(enum.IntFlag):
     """Bitmask of fault classes. Device-representable (fits uint32).
@@ -192,3 +194,24 @@ def combine_codes(codes: Iterable[int]) -> int:
     for c in codes:
         out |= int(c)
     return out
+
+
+def strip_codes(words, ignore: int = 0):
+    """Mask ``ignore`` code bits out of an error word / word array.
+
+    The single source of truth for every ``ignore=`` lane in the system:
+    :meth:`DeviceFuture.fault_steps`/:meth:`~DeviceFuture.fault_codes` (host
+    numpy), the serve replica's window enumeration (jitted), and the
+    tensor-parallel cross-shard OR-fold all strip attribution-only bits
+    (``DRAFT_REJECT``) through this one helper, so "which codes count as a
+    fault" cannot silently diverge between the detection paths. Works on
+    python ints, numpy arrays and traced jax arrays alike (``ignore`` is a
+    static python int; the mask is a numpy uint32 scalar, which both numpy
+    and jax promote without a copy).
+    """
+    if not ignore:
+        return words
+    keep = np.uint32(~np.uint32(ignore & 0xFFFFFFFF))
+    if isinstance(words, int):
+        return words & int(keep)
+    return words & keep

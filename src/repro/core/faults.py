@@ -41,8 +41,12 @@ _INJ_BITS = {
     "bad_data": INJ_BAD_DATA,
     "state_nan": INJ_STATE_NAN,
 }
-# host-level faults executed on the simulated cluster (not via inject words)
-_HOST_KINDS = frozenset({"kill", "straggle", "user"})
+# host-level faults executed on the simulated cluster (not via inject words).
+# "shard_kill" is the tensor-parallel hard fault: one shard of a replica's
+# model mesh dies, which takes the whole owning replica down (a TP replica is
+# one SPMD program — losing a shard is losing the rank) and rides the exact
+# RANK_FAILED → epoch-shrink → re-route path a full replica kill takes.
+_HOST_KINDS = frozenset({"kill", "shard_kill", "straggle", "user"})
 # every legal FaultSpec.kind: the device-word kinds, the host kinds, and
 # "code" (inject a raw ErrorCode word in-band — the fuzzer's device-fault-word
 # mutation surface, validated by validate_injectable_code)
@@ -87,11 +91,12 @@ def validate_injectable_code(code: int | ErrorCode) -> int:
 @dataclass(frozen=True)
 class FaultSpec:
     step: int
-    kind: str          # nan_loss|nan_grad|spike_loss|bad_data|state_nan|code|kill|straggle|user
+    kind: str          # nan_loss|nan_grad|spike_loss|bad_data|state_nan|code|kill|shard_kill|straggle|user
     rank: Optional[int] = 0  # None = "a seeded-random alive rank" — resolved
                              # to a concrete rank by FaultSchedule.resolve()
     magnitude: float = 1.0   # straggle: seconds; spike: factor
     code: int = 0            # kind="code": the ErrorCode word to latch in-band
+    shard: int = 0           # kind="shard_kill": which model-mesh shard dies
 
     @property
     def inject_bit(self) -> int:
@@ -232,7 +237,9 @@ def apply_host_fault(spec: FaultSpec, ctx=None) -> Optional[ErrorCode]:
     Only host kinds are accepted: handing a device-injection spec (or an
     unknown kind) here is a scheduling bug, and silently returning None would
     make the caller believe the fault fired."""
-    if spec.kind == "kill":
+    if spec.kind in ("kill", "shard_kill"):
+        # shard_kill: a TP shard loss is a hard fault of the owning replica —
+        # one SPMD program, so the whole rank thread unwinds
         if ctx is not None:
             ctx.die()  # unwinds the rank thread (hard fault)
         return None

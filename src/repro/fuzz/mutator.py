@@ -39,8 +39,8 @@ from .coverage import (
     action_ladder,
     reachable_cells,
 )
-from .runner import GROUP_RANKS
-from .trajectory import ENGINES, GROUP_ENGINE, Op, Trajectory
+from .runner import ENGINE_SPECS, GROUP_RANKS
+from .trajectory import ENGINES, GROUP_ENGINE, TP_ENGINES, Op, Trajectory
 
 MAX_OPS = 6
 NUM_SLOTS = 2                       # every runner kit uses two lanes
@@ -141,8 +141,13 @@ class FaultMutator:
         code = int(_pick(rng, INJECTABLE_CLASSES))
         if rng.random() < 0.25:       # multi-bit word: combined-code routing
             code |= int(_pick(rng, INJECTABLE_CLASSES))
+        shard = -1
+        if engine in TP_ENGINES and rng.random() < 0.5:
+            # shard-targeted half of the TP corpus: the OR-fold must make a
+            # one-shard injection indistinguishable from an all-shard one
+            shard = int(rng.integers(ENGINE_SPECS[engine].tp))
         return Op("word", cycle=cycle, slot=slot,
-                  step=int(rng.integers(4)), code=code)
+                  step=int(rng.integers(4)), code=code, shard=shard)
 
     def _group(self, rng: np.random.Generator, *, note: str,
                want: Optional[str] = None) -> Trajectory:

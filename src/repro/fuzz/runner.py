@@ -56,6 +56,7 @@ from ..launch.steps import (
 from ..models import build_model
 from ..obs import postmortem
 from ..obs.trace import Tracer, merge_trace_dicts, merge_traces
+from ..serve.config import EngineConfig
 from ..serve.group import ServeGroup
 from ..serve.queue import FAILED, OK, Request
 from ..serve.replica import SERVE_PROBES, Replica
@@ -82,12 +83,26 @@ class EngineSpec:
     draft_layers: int = 1
     max_len: int = 32     # spec engines use 64: verify-width page growth room
     num_slots: int = 2
+    tp: int = 1           # tensor-parallel width ("model" mesh axis)
+
+    def engine_config(self, max_request_retries: int) -> EngineConfig:
+        """This variant's shape as the one validated EngineConfig surface."""
+        return EngineConfig(
+            num_slots=self.num_slots, max_len=self.max_len,
+            max_request_retries=max_request_retries, window=self.window,
+            overlap=self.overlap, paged=self.paged, page_size=self.page_size,
+            speculate=self.speculate, draft_len=self.draft_len,
+            draft_layers=self.draft_layers, tp=self.tp)
 
 
 ENGINE_SPECS: dict[str, EngineSpec] = {
     "stepwise": EngineSpec(),
     "window": EngineSpec(window=4, overlap=False),
     "overlap": EngineSpec(window=4, overlap=True),
+    # tp=2 on forced host devices (conftest / the fuzz CLI set XLA_FLAGS):
+    # same window shape as "overlap", so any divergence between the two
+    # engines' streams is the cross-shard machinery's fault, nothing else's
+    "overlap_tp": EngineSpec(window=4, overlap=True, tp=2),
     "overlap_paged": EngineSpec(window=4, overlap=True, paged=True,
                                 page_size=8),
     "spec": EngineSpec(window=4, overlap=True, speculate=True, max_len=64),
@@ -120,6 +135,28 @@ def _env():
     return cfg, params
 
 
+def _tp_ctx(cfg, params, spec: EngineSpec):
+    """The kit-shared TPContext (mesh + storage specs) for a TP variant —
+    the same derivation ServeGroup/Replica perform, done once per kit.
+    Raises early when the process lacks the devices (the fuzz CLI and the
+    test conftest force host devices via XLA_FLAGS)."""
+    from ..launch.steps import TPContext
+    from ..sharding.rules import param_specs, tp_storage_specs
+    ndev = len(jax.devices())
+    if ndev < spec.tp:
+        raise ValueError(
+            f"tp={spec.tp} requires {spec.tp} devices, found {ndev} "
+            "(force host devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={spec.tp})")
+    mesh = jax.make_mesh((spec.tp,), ("model",))
+    one = build_model(cfg).init_cache(1, spec.max_len)
+    stacked = jax.tree_util.tree_map(
+        lambda v: jax.ShapeDtypeStruct((spec.num_slots, *v.shape), v.dtype),
+        one)
+    return TPContext(mesh=mesh, param_specs=param_specs(params, mesh),
+                     cache_specs=tp_storage_specs(stacked, mesh))
+
+
 @functools.lru_cache(maxsize=None)
 def get_kit(engine: str) -> EngineKit:
     cfg, params = _env()
@@ -130,6 +167,7 @@ def get_kit(engine: str) -> EngineKit:
         layout = PagedLayout(build_model(cfg).init_cache(1, spec.max_len),
                              spec.max_len, page_size=spec.page_size,
                              num_pages=num_pages)
+    tp = _tp_ctx(cfg, params, spec) if spec.tp > 1 else None
     decode_fn = jax.jit(make_slot_decode_step(cfg, SERVE_PROBES))
     prefill_fn = make_cache_prefill(cfg, SERVE_PROBES,
                                     fused=bool(spec.window), paged=layout,
@@ -139,14 +177,14 @@ def get_kit(engine: str) -> EngineKit:
     elif spec.speculate:
         window_fn = make_speculative_decode_window(
             cfg, SERVE_PROBES, window=spec.window, draft_len=spec.draft_len,
-            draft_layers=spec.draft_layers, paged=layout)
+            draft_layers=spec.draft_layers, paged=layout, tp=tp)
     elif spec.overlap:
         window_fn = make_prefill_decode_window(cfg, SERVE_PROBES,
                                                window=spec.window,
-                                               paged=layout)
+                                               paged=layout, tp=tp)
     else:
         window_fn = make_decode_window(cfg, SERVE_PROBES, window=spec.window,
-                                       paged=layout)
+                                       paged=layout, tp=tp)
     return EngineKit(engine=engine, spec=spec, cfg=cfg, params=params,
                      decode_fn=decode_fn, prefill_fn=prefill_fn,
                      window_fn=window_fn, layout=layout)
@@ -157,9 +195,11 @@ def _group_kit(max_request_retries: int,
                max_ranks: int = GROUP_RANKS) -> ServeGroup:
     cfg, _ = _env()
     return ServeGroup(cfg, nranks=GROUP_RANKS, max_ranks=max_ranks,
-                      num_slots=2, max_len=32, window=4, overlap=True,
-                      eos_id=None, max_request_retries=max_request_retries,
-                      trace=True)
+                      config=EngineConfig(
+                          num_slots=2, max_len=32, window=4, overlap=True,
+                          eos_id=None,
+                          max_request_retries=max_request_retries,
+                          trace=True))
 
 
 # ----------------------------------------------------------------- injection
@@ -181,8 +221,13 @@ class _ScheduledInjector:
         for op in ops:
             if len(shape) == 1:               # stepwise: (slots,)
                 w[op.slot % shape[0]] |= np.uint32(op.code)
-            else:                             # windowed: (K, slots)
+            elif len(shape) == 2:             # windowed: (K, slots)
                 w[op.step % shape[0], op.slot % shape[1]] |= np.uint32(op.code)
+            else:                             # TP windowed: (tp, K, slots)
+                shard = (slice(None) if op.shard < 0
+                         else op.shard % shape[0])
+                w[shard, op.step % shape[1],
+                  op.slot % shape[2]] |= np.uint32(op.code)
         return w
 
 
@@ -299,15 +344,10 @@ def _run_single(traj: Trajectory, *, reference: dict,
     kit = get_kit(traj.engine)
     spec = kit.spec
     tracer = Tracer(pid=0)
-    rep = Replica(kit.cfg, params=kit.params, num_slots=spec.num_slots,
-                  max_len=spec.max_len,
-                  max_request_retries=traj.max_request_retries,
-                  eos_id=None, decode_fn=kit.decode_fn,
-                  prefill_fn=kit.prefill_fn, window=spec.window,
-                  window_fn=kit.window_fn, overlap=spec.overlap,
-                  paged=spec.paged, page_size=spec.page_size,
-                  paged_layout=kit.layout, speculate=spec.speculate,
-                  draft_len=spec.draft_len, draft_layers=spec.draft_layers,
+    rep = Replica(kit.cfg, params=kit.params,
+                  config=spec.engine_config(traj.max_request_retries),
+                  decode_fn=kit.decode_fn, prefill_fn=kit.prefill_fn,
+                  window_fn=kit.window_fn, paged_layout=kit.layout,
                   tracer=tracer,
                   fault_injector=_ScheduledInjector(traj.ops_of("word")),
                   page_debug=True)

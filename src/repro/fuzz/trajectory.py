@@ -51,31 +51,45 @@ GROUP_OPS = frozenset({"kill", "restart", "rejoin"})
 
 #: Engine variants a trajectory can target. ``group`` is the multi-replica
 #: ULFM engine; the rest are single-replica serving code paths.
-SINGLE_ENGINES = ("stepwise", "window", "overlap", "overlap_paged",
-                  "spec", "spec_paged")
+SINGLE_ENGINES = ("stepwise", "window", "overlap", "overlap_tp",
+                  "overlap_paged", "spec", "spec_paged")
 GROUP_ENGINE = "group"
 ENGINES = SINGLE_ENGINES + (GROUP_ENGINE,)
+
+#: Tensor-parallel engine variants: their ``word`` ops may carry a ``shard``
+#: target (the injection surface is per-shard — DESIGN §3.8).
+TP_ENGINES = frozenset(e for e in SINGLE_ENGINES if e.endswith("_tp"))
 
 
 @dataclass(frozen=True)
 class Op:
     """One injection, fully timed. ``slot`` doubles as the target rank for
     ``kill``/``rejoin`` ops (``restart`` stops the whole fleet and ignores
-    it); ``step``/``code`` are only meaningful for ``word`` ops."""
+    it); ``step``/``code`` are only meaningful for ``word`` ops. ``shard``
+    targets one tensor-parallel shard of a ``word`` op on a TP engine (-1 =
+    inject on every shard); the cross-shard OR-fold must make the two cases
+    indistinguishable at retirement — that equivalence is exactly what
+    shard-targeted trajectories probe."""
 
     op: str
     cycle: int
     slot: int = 0
     step: int = 0
     code: int = 0
+    shard: int = -1
 
     def __post_init__(self):
         if self.op not in OP_KINDS:
             raise ValueError(f"unknown op {self.op!r} (known: {OP_KINDS})")
         if self.cycle < 0 or self.slot < 0 or self.step < 0:
             raise ValueError(f"negative timing/target in {self!r}")
+        if self.shard < -1:
+            raise ValueError(f"shard must be >= -1 in {self!r}")
         if self.op == "word" and self.code == 0:
             raise ValueError("word op needs a nonzero ErrorCode word")
+        if self.shard >= 0 and self.op != "word":
+            raise ValueError("shard targeting is only meaningful for word "
+                             f"ops, got {self!r}")
 
 
 @dataclass(frozen=True)
@@ -106,6 +120,10 @@ class Trajectory:
                     f"{op.op!r} op is "
                     f"{'only' if op.op in GROUP_OPS else 'not'} "
                     "valid on the group engine")
+            if op.shard >= 0 and self.engine not in TP_ENGINES:
+                raise ValueError(
+                    f"shard-targeted op {op!r} on non-TP engine "
+                    f"{self.engine!r} (TP engines: {sorted(TP_ENGINES)})")
         if sum(1 for o in self.ops if o.op == "restart") > 1:
             raise ValueError("at most one restart op per trajectory: the "
                              "replayed incarnation is the same scenario")

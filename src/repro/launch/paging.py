@@ -259,6 +259,34 @@ class PagedLayout:
 
         return jax.tree_util.tree_map_with_path(r, hybrid, fresh)
 
+    # ------------------------------------------------------ tensor parallelism
+    def tp_storage_specs(self, hybrid: Any, mesh, *, axis: str = "model"):
+        """TP *storage* PartitionSpecs for a hybrid pool tree.
+
+        Pool leaves ``(num_pages, ..., page_size, ...)`` shard a trailing
+        feature dim only — never the page dim (dim 0) nor the page-size dim:
+        the page address space stays whole on every shard, so all shards are
+        addressed through ONE logical (replicated) page table and each holds
+        its feature-slice of every page ("per-shard KV partitions sharing one
+        logical page table"). Dense ``(num_slots, ...)`` stacks follow the
+        plain serve-cache rule (:func:`repro.sharding.rules.tp_storage_specs`,
+        floor past the slot dim). Compute stays replicated — the TP window
+        all-gathers the pool back to full before gather/scatter addressing
+        runs, so paged TP is bit-exact vs single-device paged by the same
+        argument as the contiguous engine.
+        """
+        from ..sharding.rules import tp_leaf_spec
+        size = mesh.shape[axis]
+
+        def spec(path, leaf):
+            ls = self._spec(path)
+            # pool leaf: page dim 0, page_size at cap_axis + 1 — both off
+            # limits; dense stack: only the slot dim 0 is off limits
+            floor = (ls.cap_axis + 2) if ls is not None else 1
+            return tp_leaf_spec(leaf.shape, size, axis, floor)
+
+        return jax.tree_util.tree_map_with_path(spec, hybrid)
+
     # -------------------------------------------------------------- accounting
     def page_bytes(self) -> int:
         """HBM bytes of ONE physical page across all pooled leaves."""

@@ -289,8 +289,121 @@ def _paged_slot_step(slot_step, paged):
     return step
 
 
+# ------------------------------------------------------- tensor parallelism
+#: the serving-TP mesh axis name (matches the training rules in
+#: ``repro.sharding.rules`` so one mesh can serve both).
+TP_AXIS = "model"
+
+
+def _get_shard_map():
+    try:
+        return jax.shard_map            # public API on newer jax
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map
+
+
+@_dataclass(frozen=True)
+class TPContext:
+    """Everything a window factory needs to shard itself over a "model" axis.
+
+    ``param_specs``/``cache_specs`` are PartitionSpec pytrees describing how
+    the params / serve-cache (or hybrid pool) leaves are STORED across the
+    mesh (``repro.sharding.rules.param_specs`` / ``tp_storage_specs``).
+    Compute stays replicated: the TP window program all-gathers every sharded
+    leaf back to its full value before the unchanged window body runs — see
+    :func:`_tp_window`.
+    """
+
+    mesh: Any
+    param_specs: Any
+    cache_specs: Any
+
+    @property
+    def size(self) -> int:
+        return int(self.mesh.shape[TP_AXIS])
+
+
+def _tp_gather(x, spec):
+    """All-gather a storage-sharded leaf back to its full value (``tiled``
+    keeps element order, so the gathered tensor is bit-equal to the
+    single-device original)."""
+    for i, ax in enumerate(spec):
+        if ax == TP_AXIS:
+            return jax.lax.all_gather(x, TP_AXIS, axis=i, tiled=True)
+    return x
+
+
+def _tp_slice(x, spec, size: int):
+    """Inverse of :func:`_tp_gather`: slice this shard's block back out of a
+    full leaf before it leaves the shard_map program."""
+    for i, ax in enumerate(spec):
+        if ax == TP_AXIS:
+            k = x.shape[i] // size
+            return jax.lax.dynamic_slice_in_dim(
+                x, jax.lax.axis_index(TP_AXIS) * k, k, i)
+    return x
+
+
+def _tp_window(body, tp: TPContext, *, n_rest: int, words_index: int,
+               n_out: int, donate: bool):
+    """Wrap an un-jitted window body in a shard_map over the "model" axis.
+
+    Storage sharded, compute replicated: params and caches arrive as their
+    per-shard slices (specs from ``tp``), are all-gathered to the full
+    tensors inside the program, and the UNCHANGED window body runs on them —
+    so the token stream is bit-exact vs the single-device engine by
+    construction (no contraction is ever split, so XLA reduction order never
+    enters). The output's cache leaves are sliced back to their shard before
+    leaving the program; tokens / words / feeds come out replicated.
+
+    The returned jitted function takes one extra TRAILING argument ``inj`` of
+    shape ``(tp, K, S)`` uint32 — per-shard scheduled fault words (the
+    fuzzer's shard-targeted surface; zeros when idle; sharded ``P("model")``
+    so each shard sees only its own ``(1, K, S)`` slice). Each shard ORs its
+    slice into its local ``(K, S)`` word history *before* the cross-shard
+    fold::
+
+        words = reduce_or(all_gather(local_words | inj[shard]))
+
+    This is the paper's error-propagation contract applied across the shards
+    of one model: a word latched on ANY shard is in EVERY shard's folded
+    history, so the host's deferred detection, ``(step, slot)`` attribution
+    and LFLR routing behave identically no matter which shard misbehaved —
+    no shard can diverge from its peers' recovery decision (the TP analogue
+    of "no rank deadlocks waiting for a peer that already failed").
+    """
+    shard_map = _get_shard_map()
+    size = tp.size
+
+    def tp_body(params, caches, *rest_and_inj):
+        *rest, inj = rest_and_inj
+        pfull = jax.tree_util.tree_map(_tp_gather, params, tp.param_specs)
+        cfull = jax.tree_util.tree_map(_tp_gather, caches, tp.cache_specs)
+        out = list(body(pfull, cfull, *rest))
+        words = out[words_index].astype(jnp.uint32) | inj[0]
+        allw = jax.lax.all_gather(words, TP_AXIS)
+        out[words_index] = jax.lax.reduce(allw, jnp.uint32(0),
+                                          jax.lax.bitwise_or, (0,))
+        out[-1] = jax.tree_util.tree_map(
+            lambda x, s: _tp_slice(x, s, size), out[-1], tp.cache_specs)
+        return tuple(out)
+
+    in_specs = ((tp.param_specs, tp.cache_specs) + (P(),) * n_rest
+                + (P(TP_AXIS),))
+    out_specs = (P(),) * (n_out - 1) + (tp.cache_specs,)
+    try:
+        mapped = shard_map(tp_body, mesh=tp.mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+    except TypeError:   # newer jax renamed the replication-check kwarg
+        mapped = shard_map(tp_body, mesh=tp.mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+    return jax.jit(mapped, donate_argnums=(1,) if donate else ())
+
+
 def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
-                       *, window: int, donate: bool = True, paged=None):
+                       *, window: int, donate: bool = True, paged=None,
+                       tp: TPContext | None = None):
     """Pipelined decode window: K fused slot-decode steps in one device program.
 
     The serving hot path must not pay a host-device round trip per token — the
@@ -325,6 +438,12 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
     addressing runs *inside* the window scan, so the zero-sync on-device
     token chain is untouched and the produced tokens are bit-exact vs the
     contiguous layout.
+
+    With ``tp`` (a :class:`TPContext`) the whole window is shard_mapped over
+    the "model" mesh axis (:func:`_tp_window`): params/caches are passed as
+    their per-shard storage slices, the function takes one extra trailing
+    ``inj (tp, K, S) uint32`` per-shard injection argument, and the returned
+    word history is the cross-shard OR-fold.
     """
     if window < 1:
         raise ValueError(f"window must be >= 1, got {window}")
@@ -345,6 +464,9 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
                        jnp.asarray(pos, jnp.int32)), None, length=window)
             return toks, words.astype(jnp.uint32), next_tok, hybrid
 
+        if tp is not None:
+            return _tp_window(paged_window_step, tp, n_rest=3,
+                              words_index=1, n_out=4, donate=donate)
         return jax.jit(paged_window_step,
                        donate_argnums=(1,) if donate else ())
 
@@ -360,12 +482,16 @@ def make_decode_window(cfg: ModelConfig, probe_cfg: ProbeConfig | None = None,
                    jnp.asarray(pos, jnp.int32)), None, length=window)
         return toks, words.astype(jnp.uint32), next_tok, caches
 
+    if tp is not None:
+        return _tp_window(window_step, tp, n_rest=2, words_index=1, n_out=4,
+                          donate=donate)
     return jax.jit(window_step, donate_argnums=(1,) if donate else ())
 
 
 def make_prefill_decode_window(cfg: ModelConfig,
                                probe_cfg: ProbeConfig | None = None, *,
-                               window: int, donate: bool = True, paged=None):
+                               window: int, donate: bool = True, paged=None,
+                               tp: TPContext | None = None):
     """Fused decode+prefill window: chunked prefill rides the decode scan.
 
     The last synchronous edge of the serving pipeline is admission / LFLR
@@ -434,6 +560,9 @@ def make_prefill_decode_window(cfg: ModelConfig,
                  jnp.arange(window, dtype=jnp.int32)))
             return toks, words.astype(jnp.uint32), next_tok, hybrid
 
+        if tp is not None:
+            return _tp_window(paged_window_step, tp, n_rest=5,
+                              words_index=1, n_out=4, donate=donate)
         return jax.jit(paged_window_step,
                        donate_argnums=(1,) if donate else ())
 
@@ -456,6 +585,9 @@ def make_prefill_decode_window(cfg: ModelConfig,
              jnp.arange(window, dtype=jnp.int32)))
         return toks, words.astype(jnp.uint32), next_tok, caches
 
+    if tp is not None:
+        return _tp_window(window_step, tp, n_rest=4, words_index=1, n_out=4,
+                          donate=donate)
     return jax.jit(window_step, donate_argnums=(1,) if donate else ())
 
 
@@ -463,7 +595,7 @@ def make_speculative_decode_window(cfg: ModelConfig,
                                    probe_cfg: ProbeConfig | None = None, *,
                                    window: int, draft_len: int,
                                    draft_layers: int, donate: bool = True,
-                                   paged=None):
+                                   paged=None, tp: TPContext | None = None):
     """Speculative decode window: draft-and-verify inside one dispatch.
 
     The zero-sync window (:func:`make_decode_window`) pays one full-model
@@ -626,6 +758,9 @@ def make_speculative_decode_window(cfg: ModelConfig,
             return (toks, counts.astype(jnp.int32), words.astype(jnp.uint32),
                     next_tok, next_pos, hybrid)
 
+        if tp is not None:
+            return _tp_window(paged_window_step, tp, n_rest=5,
+                              words_index=2, n_out=6, donate=donate)
         return jax.jit(paged_window_step,
                        donate_argnums=(1,) if donate else ())
 
@@ -647,6 +782,9 @@ def make_speculative_decode_window(cfg: ModelConfig,
         return (toks, counts.astype(jnp.int32), words.astype(jnp.uint32),
                 next_tok, next_pos, caches)
 
+    if tp is not None:
+        return _tp_window(window_step, tp, n_rest=4, words_index=2, n_out=6,
+                          donate=donate)
     return jax.jit(window_step, donate_argnums=(1,) if donate else ())
 
 

@@ -236,6 +236,41 @@ def validate(trace: dict) -> list[str]:
             problems.append(
                 f"replica {_args(j).get('rank', j.get('pid'))} joined without "
                 "a completed state_transfer span preceding the join")
+    # tensor-parallel reconciliation: a fault on a TP replica fans out one
+    # shard_fanout instant per shard — all shards 0..tp-1 must appear for
+    # each (replica, window), or a shard diverged from its peers' view of
+    # the folded error word (exactly what the cross-shard OR-fold forbids)
+    fanouts: dict[tuple, set[int]] = {}
+    fanout_tp: dict[tuple, int] = {}
+    for e in evs:
+        if e.get("name") != "shard_fanout":
+            continue
+        a = _args(e)
+        key = (e.get("pid", 0), a.get("window"))
+        fanouts.setdefault(key, set()).add(int(a.get("shard", -1)))
+        fanout_tp[key] = int(a.get("tp", 0))
+    for key, shards in fanouts.items():
+        tp = fanout_tp[key]
+        missing = sorted(set(range(tp)) - shards)
+        if missing:
+            problems.append(
+                f"replica {key[0]} window {key[1]}: fault fanned out to "
+                f"shards {sorted(shards)} but not {missing} (tp={tp}) — "
+                "cross-shard reconciliation incomplete")
+    # a TP shard loss is a hard fault of the whole owning replica: every
+    # shard_loss must be followed by that replica's kill (one SPMD program —
+    # a surviving half-replica would violate the shard-set contract)
+    kills_by_pid = [(e.get("pid", 0), e["ts"]) for e in evs
+                    if e.get("name") == "replica_kill"]
+    for e in evs:
+        if e.get("name") != "shard_loss":
+            continue
+        pid = e.get("pid", 0)
+        if not any(kp == pid and kt >= e["ts"] - 1.0
+                   for kp, kt in kills_by_pid):
+            problems.append(
+                f"replica {pid}: shard {_args(e).get('shard')} lost but the "
+                "owning replica never died (a TP replica must fail whole)")
     return problems
 
 

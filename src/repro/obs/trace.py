@@ -62,6 +62,10 @@ _HASH_MOD = 1 << 32
 
 # tid of the engine-wide lane (window spans); slot lanes use their slot index.
 ENGINE_TID = 1 << 20
+# base tid of the tensor-parallel shard lanes: shard s of a TP replica emits
+# its reconciliation events (``shard_fanout``) on SHARD_TID + s, so the shard
+# fan-out renders as its own lane block above the engine lane.
+SHARD_TID = 1 << 21
 
 
 class Tracer:

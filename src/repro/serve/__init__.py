@@ -26,6 +26,7 @@ exceptions* at a wait, never deadlocks or aborts — to inference traffic.
   (faults → recovery lanes →) terminal response, exported as Perfetto
   ``trace_event`` JSON (DESIGN §3.5).
 """
+from .config import EngineConfig, resolve_engine_config  # noqa: F401
 from .group import GroupResult, RankReport, ServeGroup  # noqa: F401
 from .metrics import FaultRecord, ServeMetrics  # noqa: F401
 from .queue import (  # noqa: F401

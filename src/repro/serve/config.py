@@ -1,0 +1,225 @@
+"""EngineConfig — the one validated construction surface for serving engines.
+
+PRs 1–8 grew the engine surface one keyword at a time: ``window=``,
+``overlap=``, ``paged=``/``page_size=``/``page_budget=``/``page_watermark=``,
+``speculate=``/``draft_len=``/``draft_layers=``, ``trace=`` — threaded in
+parallel through :class:`~repro.serve.replica.Replica`,
+:class:`~repro.serve.group.ServeGroup` and the benchmark cells, with the
+cross-field rules (speculation needs windows, paging needs windows, …)
+re-checked ad hoc at each layer. Adding tensor parallelism (``tp=``) would
+have been the eleventh copy of the sprawl, so this dataclass collapses it:
+
+* every *engine-shape* knob lives here, validated once in ``__post_init__``
+  (cross-field rules included — a bad combination fails at construction, in
+  one place, with one message);
+* :meth:`from_flags` subsumes the ``"win=8,spec=1,dlen=3"``-style string
+  parsing that benchmarks/CLI entry points used to hand-roll per tool;
+* ``Replica(...)``/``ServeGroup(...)`` take ``config=EngineConfig(...)``;
+  the old keyword arguments still work for one release through
+  :func:`resolve_engine_config` (emitting ``DeprecationWarning``), so
+  downstream callers migrate on their own clock.
+
+Runtime *wiring* (queues, tracers, shared jitted fns, clocks, injectors)
+deliberately stays out: those are per-instance objects, not engine shape, and
+an EngineConfig must stay hashable/serialisable so benchmark cells and fuzz
+engine kits can be declared as data.
+
+Model-dependent checks (``speculate`` requires
+``Model.supports_speculation()``; ``tp`` requires enough devices for the
+"model" mesh axis) stay in the Replica, which is the first layer that has the
+model/devices in hand — but they are *reached* through exactly one path now.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Optional
+
+#: every legacy keyword that migrated into EngineConfig, in the order the old
+#: Replica/ServeGroup signatures listed them (the deprecation shim accepts
+#: exactly these; anything else is a genuine TypeError).
+LEGACY_ENGINE_KWARGS = (
+    "num_slots", "max_len", "eos_id", "max_request_retries", "window",
+    "donate", "overlap", "prefill_budget", "paged", "page_size",
+    "page_budget", "page_watermark", "speculate", "draft_len", "draft_layers",
+    "tp", "trace", "trace_sample",
+)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Shape of one serving engine. Frozen, hashable, validated.
+
+    ``tp`` is the tensor-parallel width: ``tp > 1`` shards the decode /
+    verify / prefill windows over a ``tp``-way "model" mesh axis (storage
+    sharded by :mod:`repro.sharding.rules`, compute replicated after an
+    in-program all-gather — DESIGN §3.8), with per-shard error words
+    OR-folded across the axis so a fault on any shard latches identically on
+    all shards. Requires window mode with overlapped admission (the blocking
+    prefill path is not built for TP) and ``tp`` visible devices at
+    construction.
+    """
+
+    num_slots: int = 4
+    max_len: int = 64
+    eos_id: Optional[int] = None
+    max_request_retries: int = 2
+    # ---- decode windows (PR 2/3) --------------------------------------
+    window: int = 0
+    donate: bool = True
+    overlap: bool = True
+    prefill_budget: Optional[int] = None
+    # ---- paged KV pool (PR 4) -----------------------------------------
+    paged: bool = False
+    page_size: int = 8
+    page_budget: Optional[int] = None
+    page_watermark: int = 0
+    # ---- speculative windows (PR 5) -----------------------------------
+    speculate: bool = False
+    draft_len: int = 3
+    draft_layers: int = 1
+    # ---- tensor parallelism (PR 9) ------------------------------------
+    tp: int = 1
+    # ---- tracing (PR 6; consumed by ServeGroup — a Replica takes a
+    # Tracer object directly) -------------------------------------------
+    trace: bool = False
+    trace_sample: float = 1.0
+
+    def __post_init__(self):
+        if self.num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {self.num_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.max_request_retries < 0:
+            raise ValueError("max_request_retries must be >= 0, got "
+                             f"{self.max_request_retries}")
+        if self.window < 0:
+            raise ValueError(f"window must be >= 0, got {self.window}")
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 (or None), got "
+                             f"{self.prefill_budget}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.page_budget is not None and self.page_budget < 1:
+            raise ValueError("page_budget must be >= 1 (or None), got "
+                             f"{self.page_budget}")
+        if self.page_watermark < 0:
+            raise ValueError("page_watermark must be >= 0, got "
+                             f"{self.page_watermark}")
+        if self.draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {self.draft_len}")
+        if self.draft_layers < 1:
+            raise ValueError("draft_layers must be >= 1, got "
+                             f"{self.draft_layers}")
+        if not 0.0 <= self.trace_sample <= 1.0:
+            raise ValueError("trace_sample must be in [0, 1], got "
+                             f"{self.trace_sample}")
+        # cross-field rules — previously scattered through Replica.__init__
+        if self.paged and not self.window:
+            raise ValueError("paged=True requires window mode (window=K)")
+        if self.speculate and not self.window:
+            raise ValueError("speculate=True requires window mode (window=K)")
+        if self.speculate and not self.overlap:
+            raise ValueError(
+                "speculate=True requires overlap=True (admission/LFLR must "
+                "ride the window: the blocking-prefill patch path assumes a "
+                "host-predictable position chain)")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.tp > 1 and not self.window:
+            raise ValueError(
+                "tp>1 requires window mode (window=K): the cross-shard "
+                "error-word fold lives in the window enumeration")
+        if self.tp > 1 and not self.overlap:
+            raise ValueError(
+                "tp>1 requires overlap=True: admission/LFLR must ride the "
+                "sharded windows (the blocking prefill path is single-device)")
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def from_flags(cls, spec: str, **overrides) -> "EngineConfig":
+        """Parse ``"win=8,spec=1,dlen=3,tp=2,paged=1,page=16"`` → EngineConfig.
+
+        One parser for every CLI/benchmark entry point (subsumes the
+        ``spec/dlen/dlayers`` string parsing the tools used to duplicate).
+        Bare keys are boolean shorthand (``"paged,spec"`` ≡
+        ``"paged=1,spec=1"``); ``overrides`` are applied on top (a tool's
+        fixed ``num_slots`` beats the flag string). Unknown keys raise — a
+        typo must not silently configure the default engine.
+        """
+        bool_fields = {"donate", "overlap", "paged", "speculate", "trace"}
+        alias = {
+            "win": "window", "window": "window",
+            "slots": "num_slots", "num_slots": "num_slots",
+            "max_len": "max_len", "eos": "eos_id", "eos_id": "eos_id",
+            "retries": "max_request_retries",
+            "max_request_retries": "max_request_retries",
+            "donate": "donate", "overlap": "overlap",
+            "budget": "prefill_budget", "prefill_budget": "prefill_budget",
+            "page": "page_size", "page_size": "page_size",
+            "paged": "paged", "pages": "page_budget",
+            "page_budget": "page_budget",
+            "watermark": "page_watermark", "page_watermark": "page_watermark",
+            "spec": "speculate", "speculate": "speculate",
+            "dlen": "draft_len", "draft_len": "draft_len",
+            "dlayers": "draft_layers", "draft_layers": "draft_layers",
+            "tp": "tp", "trace": "trace", "trace_sample": "trace_sample",
+        }
+        kw: dict = {}
+        for part in (spec or "").split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            if k not in alias:
+                raise ValueError(
+                    f"unknown engine flag {k!r} (known: "
+                    f"{sorted(set(alias))})")
+            field = alias[k]
+            if not v:
+                if field not in bool_fields and field != "window":
+                    raise ValueError(f"engine flag {k!r} needs a value")
+                kw[field] = True if field in bool_fields else kw.get(field, 0)
+                continue
+            if field in bool_fields:
+                kw[field] = bool(int(v))
+            elif field == "trace_sample":
+                kw[field] = float(v)
+            else:
+                kw[field] = int(v)
+            # legacy ``page=16`` meant "paged pool with 16-token pages"
+            if k == "page" and int(v) > 0:
+                kw["paged"] = True
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def resolve_engine_config(config: Optional[EngineConfig], legacy: dict, *,
+                          owner: str,
+                          defaults: Optional[EngineConfig] = None,
+                          stacklevel: int = 3) -> EngineConfig:
+    """One-release deprecation shim: legacy engine kwargs → EngineConfig.
+
+    ``legacy`` holds only the old-style keywords the caller actually passed
+    (collected via ``**legacy`` in the owner's signature). They still work —
+    applied over ``config`` (or over ``defaults``, the owner's historical
+    default shape) via ``dataclasses.replace``, so mixed call sites behave
+    exactly as before — but each call emits one ``DeprecationWarning`` naming
+    the offending keys and the replacement field spelling. Unknown keys raise
+    ``TypeError`` exactly like a misspelled keyword always did.
+    """
+    base = config if config is not None else (defaults or EngineConfig())
+    if not legacy:
+        return base
+    unknown = [k for k in legacy if k not in LEGACY_ENGINE_KWARGS]
+    if unknown:
+        raise TypeError(
+            f"{owner}() got unexpected keyword argument(s) "
+            f"{sorted(unknown)}")
+    warnings.warn(
+        f"{owner}({', '.join(sorted(legacy))}=...) is deprecated; pass "
+        f"config=EngineConfig({', '.join(sorted(legacy))}=...) instead "
+        "(the old kwargs will be removed next release)",
+        DeprecationWarning, stacklevel=stacklevel)
+    return dataclasses.replace(base, **legacy)

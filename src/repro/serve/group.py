@@ -77,6 +77,7 @@ from ..launch.steps import (
 )
 from ..models import build_model
 from ..obs.trace import NULL_TRACER, Tracer, merge_traces
+from .config import EngineConfig, resolve_engine_config
 from .ledger import GroupLedger, WriteAheadLog
 from .ledger import replay as replay_ledger
 from .metrics import ServeMetrics
@@ -180,30 +181,24 @@ class GroupResult:
 class ServeGroup:
     """A fleet of serving replicas over the simulated multi-rank runtime."""
 
-    def __init__(self, cfg, nranks: int, *, num_slots: int = 2,
-                 max_len: int = 64, seed: int = 0, probe_cfg=SERVE_PROBES,
-                 max_request_retries: int = 2, eos_id: Optional[int] = None,
-                 timeout: float = 30.0, window: int = 0, donate: bool = True,
-                 overlap: bool = True,
-                 prefill_budget: Optional[int] = None,
-                 paged: bool = False, page_size: int = 8,
-                 page_budget: Optional[int] = None,
-                 page_watermark: int = 0,
-                 speculate: bool = False, draft_len: int = 3,
-                 draft_layers: int = 1,
-                 trace: bool = False, trace_sample: float = 1.0,
+    def __init__(self, cfg, nranks: int, *,
+                 config: Optional[EngineConfig] = None,
+                 seed: int = 0, probe_cfg=SERVE_PROBES,
+                 timeout: float = 30.0,
                  max_ranks: Optional[int] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
                  transfer_chunks: int = _TRANSFER_CHUNKS,
-                 transfer_pause_s: float = _TRANSFER_PAUSE_S):
+                 transfer_pause_s: float = _TRANSFER_PAUSE_S,
+                 **legacy):
+        # engine shape comes in through one validated EngineConfig (the
+        # historical group default was num_slots=2, preserved here); group
+        # wiring (timeouts, elasticity, transfer shape) stays real keywords.
+        # Old shape kwargs still work for one release via the deprecation shim.
+        config = resolve_engine_config(config, legacy, owner="ServeGroup",
+                                       defaults=EngineConfig(num_slots=2))
+        self.config = config
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
-        if paged and not window:
-            # fail here, not as N concurrent thread deaths inside serve()
-            raise ValueError("paged=True requires window mode (window=K)")
-        if speculate and not (window and overlap):
-            raise ValueError(
-                "speculate=True requires window mode with overlap=True")
         self.cfg = cfg
         self.nranks = nranks
         self.max_ranks = max(nranks, int(max_ranks or nranks))
@@ -213,23 +208,25 @@ class ServeGroup:
         # cell needs a measurement window wider than one retire burst)
         self.transfer_chunks = int(transfer_chunks)
         self.transfer_pause_s = float(transfer_pause_s)
-        self.num_slots = num_slots
-        self.max_len = max_len
+        self.num_slots = config.num_slots
+        self.max_len = config.max_len
         self.timeout = timeout
-        self.max_request_retries = max_request_retries
-        self.eos_id = eos_id
-        self.window = int(window)
-        self.overlap = bool(self.window) and bool(overlap)
-        self.prefill_budget = prefill_budget
-        self.paged = bool(paged)
-        self.page_size = page_size
-        self.page_budget = page_budget
-        self.page_watermark = page_watermark
-        self.speculate = bool(speculate)
-        self.draft_len = int(draft_len)
-        self.draft_layers = int(draft_layers)
-        self.trace = bool(trace)
-        self.trace_sample = float(trace_sample)
+        self.max_request_retries = config.max_request_retries
+        self.eos_id = config.eos_id
+        self.window = int(config.window)
+        self.overlap = bool(self.window) and bool(config.overlap)
+        self.prefill_budget = config.prefill_budget
+        self.paged = bool(config.paged)
+        self.page_size = config.page_size
+        self.page_budget = config.page_budget
+        self.page_watermark = config.page_watermark
+        self.speculate = bool(config.speculate)
+        self.draft_len = int(config.draft_len)
+        self.draft_layers = int(config.draft_layers)
+        self.tp = int(config.tp)
+        self.trace = bool(config.trace)
+        self.trace_sample = float(config.trace_sample)
+        donate = config.donate
         self.params = build_model(cfg).init(jax.random.PRNGKey(seed))
         # compile once, share across rank threads (jit dispatch is thread-safe)
         # — each paged replica owns its own pool + table, but the layout (and
@@ -237,13 +234,21 @@ class ServeGroup:
         if self.paged:
             from ..launch.paging import PagedLayout
             model = build_model(cfg)
-            num_pages = (int(page_budget) if page_budget is not None
-                         else num_slots * (max_len // page_size))
-            self._layout = PagedLayout(model.init_cache(1, max_len), max_len,
-                                       page_size=page_size,
+            num_pages = (int(self.page_budget) if self.page_budget is not None
+                         else self.num_slots * (self.max_len // self.page_size))
+            self._layout = PagedLayout(model.init_cache(1, self.max_len),
+                                       self.max_len,
+                                       page_size=self.page_size,
                                        num_pages=num_pages)
         else:
             self._layout = None
+        # tensor-parallel fleet: ONE TPContext (mesh + storage specs) shared
+        # by the jitted window program below and by every rank's Replica —
+        # jax.make_mesh with identical args yields equal Mesh objects, so the
+        # per-rank replicas hit the same compilation cache
+        self._tp_ctx = None
+        if self.tp > 1:
+            self._tp_ctx = self._make_tp_ctx()
         self._decode_fn = jax.jit(make_slot_decode_step(cfg, probe_cfg))
         self._prefill_fn = make_cache_prefill(cfg, probe_cfg,
                                               fused=bool(self.window),
@@ -255,15 +260,42 @@ class ServeGroup:
             self._window_fn = make_speculative_decode_window(
                 cfg, probe_cfg, window=self.window, draft_len=self.draft_len,
                 draft_layers=self.draft_layers, donate=donate,
-                paged=self._layout)
+                paged=self._layout, tp=self._tp_ctx)
         elif self.overlap:
             self._window_fn = make_prefill_decode_window(
                 cfg, probe_cfg, window=self.window, donate=donate,
-                paged=self._layout)
+                paged=self._layout, tp=self._tp_ctx)
         else:
             self._window_fn = make_decode_window(
                 cfg, probe_cfg, window=self.window, donate=donate,
-                paged=self._layout)
+                paged=self._layout, tp=self._tp_ctx)
+
+    def _make_tp_ctx(self):
+        """The fleet-shared :class:`~repro.launch.steps.TPContext`: same mesh
+        and storage specs every rank's Replica derives for itself, computed
+        once here so the shared window program is sharded at build time.
+        Cache specs come from shape templates only — nothing is materialised."""
+        from ..launch.steps import TPContext
+        from ..sharding.rules import param_specs, tp_storage_specs
+        ndev = len(jax.devices())
+        if ndev < self.tp:
+            raise ValueError(
+                f"tp={self.tp} requires {self.tp} devices, found {ndev} "
+                "(on CPU, force host devices with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={self.tp})")
+        mesh = jax.make_mesh((self.tp,), ("model",))
+        one = build_model(self.cfg).init_cache(1, self.max_len)
+        if self.paged:
+            hybrid = self._layout.init_hybrid(one, self.num_slots)
+            cspecs = self._layout.tp_storage_specs(hybrid, mesh)
+        else:
+            stacked = jax.tree_util.tree_map(
+                lambda v: jax.ShapeDtypeStruct((self.num_slots, *v.shape),
+                                               v.dtype), one)
+            cspecs = tp_storage_specs(stacked, mesh)
+        return TPContext(mesh=mesh,
+                         param_specs=param_specs(self.params, mesh),
+                         cache_specs=cspecs)
 
     # ------------------------------------------------------------ entry points
     def serve(self, requests: Sequence[Request], *,
@@ -384,19 +416,10 @@ class ServeGroup:
             queue = RequestQueue(AdmissionPolicy(
                 max_queue=10_000, max_total_len=pool_cap), tracer=tracer)
             return Replica(
-                self.cfg, params=self.params, num_slots=self.num_slots,
-                max_len=self.max_len, queue=queue, rank=rank,
-                max_request_retries=self.max_request_retries,
-                eos_id=self.eos_id,
+                self.cfg, params=self.params, config=self.config,
+                queue=queue, rank=rank,
                 decode_fn=self._decode_fn, prefill_fn=self._prefill_fn,
-                window=self.window, window_fn=self._window_fn,
-                overlap=self.overlap, prefill_budget=self.prefill_budget,
-                paged=self.paged, page_size=self.page_size,
-                page_budget=self.page_budget,
-                page_watermark=self.page_watermark,
-                paged_layout=self._layout,
-                speculate=self.speculate, draft_len=self.draft_len,
-                draft_layers=self.draft_layers)
+                window_fn=self._window_fn, paged_layout=self._layout)
 
         def serve_rounds(ctx, comm, replica, tracer, report, my_epoch, *,
                          inject_faults=True):
@@ -423,6 +446,20 @@ class ServeGroup:
                              if inject_faults else ()):
                     if spec.kind == "kill":
                         if tracer.enabled:
+                            tracer.instant("replica_kill", "group",
+                                           rank=ctx.rank, round=round_i)
+                        ctx.die()                       # never returns
+                    elif spec.kind == "shard_kill":
+                        # TP shard loss: one shard of this replica's model
+                        # mesh dies. A TP replica is one SPMD program, so the
+                        # shard loss is a hard fault of the whole rank — the
+                        # survivors see the same RANK_FAILED → shrink →
+                        # re-route path a full replica kill drives; the
+                        # shard_loss instant records which shard was the cause
+                        if tracer.enabled:
+                            tracer.instant("shard_loss", "group",
+                                           rank=ctx.rank, round=round_i,
+                                           shard=spec.shard, tp=self.tp)
                             tracer.instant("replica_kill", "group",
                                            rank=ctx.rank, round=round_i)
                         ctx.die()                       # never returns

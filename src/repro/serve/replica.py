@@ -75,6 +75,7 @@ from ..core.faults import INJECTABLE_CODE_MASK as _INJECTABLE_MASK
 from ..core.recovery import Action, RecoveryPolicy
 from ..launch.paging import PagedLayout
 from ..launch.steps import (
+    TPContext,
     make_cache_prefill,
     make_decode_window,
     make_prefill_decode_window,
@@ -82,7 +83,8 @@ from ..launch.steps import (
     make_speculative_decode_window,
 )
 from ..models import build_model
-from ..obs.trace import NULL_TRACER, Tracer
+from ..obs.trace import NULL_TRACER, SHARD_TID, Tracer
+from .config import EngineConfig, resolve_engine_config
 from .metrics import ServeMetrics
 from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
 from .scheduler import ContinuousBatchingScheduler, PageAllocator, PagePoolExhausted
@@ -131,13 +133,14 @@ def make_window_enum_fn(num_slots: int, ignore: int = 0):
     window whose only events are speculation misses must wait() clean, never
     raise.
     """
+    from ..core.errors import strip_codes
+
     slot_enum = make_enum_fn(num_slots)
-    keep = jnp.uint32(~ignore & 0xFFFFFFFF)
 
     @jax.jit
     def enum(history, mask):
         hist = history.astype(WORD_DTYPE) * mask.astype(WORD_DTYPE)[None, :]
-        words = jax.lax.reduce(hist & keep, jnp.uint32(0),
+        words = jax.lax.reduce(strip_codes(hist, ignore), jnp.uint32(0),
                                jax.lax.bitwise_or, (0,))
         combined, count, table = slot_enum(words, jnp.ones_like(mask))
         return combined, count, table, hist
@@ -189,28 +192,34 @@ class Replica:
     """One continuous-batching serving replica (single host / rank)."""
 
     def __init__(self, cfg: ModelConfig, params: Any = None, *,
-                 num_slots: int = 4, max_len: int = 64,
+                 config: Optional[EngineConfig] = None,
                  queue: RequestQueue | None = None,
                  policy: RecoveryPolicy | None = None,
                  metrics: ServeMetrics | None = None,
                  probe_cfg: ProbeConfig = SERVE_PROBES,
-                 max_request_retries: int = 2,
-                 rank: int = 0, seed: int = 0, eos_id: Optional[int] = None,
+                 rank: int = 0, seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  decode_fn: Callable | None = None,
                  prefill_fn: Callable | None = None,
-                 window: int = 0, donate: bool = True,
                  window_fn: Callable | None = None,
-                 overlap: bool = True,
-                 prefill_budget: Optional[int] = None,
-                 paged: bool = False, page_size: int = 8,
-                 page_budget: Optional[int] = None, page_watermark: int = 0,
                  paged_layout: Optional[PagedLayout] = None,
-                 speculate: bool = False, draft_len: int = 3,
-                 draft_layers: int = 1,
                  tracer: Optional[Tracer] = None,
                  fault_injector: Optional[Callable] = None,
-                 page_debug: Optional[bool] = None):
+                 page_debug: Optional[bool] = None,
+                 **legacy):
+        # engine *shape* lives in one validated EngineConfig; runtime wiring
+        # (queue, policy, shared jitted fns, tracer, injector, clock) stays as
+        # real keywords. Old shape kwargs still work for one release through
+        # the deprecation shim.
+        config = resolve_engine_config(config, legacy, owner="Replica")
+        self.config = config
+        num_slots, max_len = config.num_slots, config.max_len
+        window, donate, overlap = config.window, config.donate, config.overlap
+        prefill_budget, eos_id = config.prefill_budget, config.eos_id
+        paged, page_size = config.paged, config.page_size
+        page_budget, page_watermark = config.page_budget, config.page_watermark
+        speculate = config.speculate
+        draft_len, draft_layers = config.draft_len, config.draft_layers
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else self.model.init(
@@ -235,7 +244,7 @@ class Replica:
         # committed token (or swept as abandoned when the request leaves the
         # slot without one — its terminal response resolves the fault)
         self._recovering: dict[int, dict] = {}
-        self.max_request_retries = max_request_retries
+        self.max_request_retries = config.max_request_retries
         # deterministic in-band fault-word injection (the fuzzer's device
         # mutation surface): called once per dispatch with the dispatch index
         # and the words shape — (slots,) stepwise, (K, slots) windowed — and
@@ -335,6 +344,35 @@ class Replica:
                 lambda v: jnp.broadcast_to(v[None],
                                            (num_slots, *v.shape)).copy(),
                 one)
+        # ---- tensor parallelism (tp > 1, window + overlap mode) -----------
+        # one replica = tp shards of a "model" mesh: params and cache leaves
+        # are STORED sharded (rules.param_specs / tp_storage_specs), compute
+        # stays replicated inside the shard_mapped window, and per-shard
+        # error words are OR-folded across the axis so a fault on any shard
+        # latches identically on all shards (DESIGN §3.8)
+        self.tp = int(config.tp)
+        self._tp_ctx: Optional[TPContext] = None
+        if self.tp > 1:
+            ndev = len(jax.devices())
+            if ndev < self.tp:
+                raise ValueError(
+                    f"tp={self.tp} requires {self.tp} devices, found {ndev} "
+                    "(on CPU, force host devices with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={self.tp})")
+            from jax.sharding import NamedSharding
+            from ..sharding.rules import param_specs, tp_storage_specs
+            mesh = jax.make_mesh((self.tp,), ("model",))
+            pspecs = param_specs(self.params, mesh)
+            cspecs = (self.layout.tp_storage_specs(self.caches, mesh)
+                      if self.paged else
+                      tp_storage_specs(self.caches, mesh))
+            self._tp_ctx = TPContext(mesh=mesh, param_specs=pspecs,
+                                     cache_specs=cspecs)
+            ns = lambda s: NamedSharding(mesh, s)  # noqa: E731
+            self.params = jax.device_put(
+                self.params, jax.tree_util.tree_map(ns, pspecs))
+            self.caches = jax.device_put(
+                self.caches, jax.tree_util.tree_map(ns, cspecs))
         self._slot_logits = jnp.zeros((num_slots, 1, 1, cfg.vocab_size),
                                       jnp.float32)
         self._step_count = 0
@@ -346,15 +384,18 @@ class Replica:
                 self._decode_window = make_speculative_decode_window(
                     cfg, probe_cfg, window=self.window,
                     draft_len=self.draft_len, draft_layers=self.draft_layers,
-                    donate=donate, paged=self.layout if self.paged else None)
+                    donate=donate, paged=self.layout if self.paged else None,
+                    tp=self._tp_ctx)
             elif self.overlap:
                 self._decode_window = make_prefill_decode_window(
                     cfg, probe_cfg, window=self.window, donate=donate,
-                    paged=self.layout if self.paged else None)
+                    paged=self.layout if self.paged else None,
+                    tp=self._tp_ctx)
             else:
                 self._decode_window = make_decode_window(
                     cfg, probe_cfg, window=self.window, donate=donate,
-                    paged=self.layout if self.paged else None)
+                    paged=self.layout if self.paged else None,
+                    tp=self._tp_ctx)
             # speculation misses (DRAFT_REJECT) are attribution-only: strip
             # them from the fault-raising fold so they never reach wait()
             self._ignore_codes = (int(ErrorCode.DRAFT_REJECT)
@@ -691,18 +732,17 @@ class Replica:
         self._check_pages()
         return True
 
-    def _inject_words(self, words, shape: tuple):
-        """OR the injector's scheduled fault word(s) for this dispatch into
-        the device error words, *before* masking/enumeration — an injected
-        code is indistinguishable from a probe-latched one from that point
-        on (deferred detection, (step, slot) attribution, recovery routing
-        all run for real). No-op (and zero extra dispatches) without an
-        injector."""
+    def _injection_for(self, shape: tuple) -> Optional[np.ndarray]:
+        """The injector's validated fault word(s) for this dispatch, or None
+        when nothing is scheduled. Shape is the engine's word surface:
+        ``(slots,)`` stepwise, ``(K, slots)`` windowed, ``(tp, K, slots)``
+        tensor-parallel (shard-targeted injection — the TP kit's device
+        mutation surface)."""
         if self._injector is None:
-            return words
+            return None
         inj = self._injector(self._step_count, shape)
         if inj is None:
-            return words
+            return None
         inj = np.asarray(inj, np.uint32)
         if inj.shape != shape:
             raise ValueError(
@@ -713,6 +753,20 @@ class Replica:
             raise ValueError(
                 f"fault_injector word {bad:#x} carries non-injectable bits "
                 "(attribution-only / hard / undefined)")
+        return inj
+
+    def _inject_words(self, words, shape: tuple):
+        """OR the injector's scheduled fault word(s) for this dispatch into
+        the device error words, *before* masking/enumeration — an injected
+        code is indistinguishable from a probe-latched one from that point
+        on (deferred detection, (step, slot) attribution, recovery routing
+        all run for real). No-op (and zero extra dispatches) without an
+        injector. The TP engine does not use this host-side path: its
+        injection rides INTO the shard_mapped window as a per-shard operand
+        so it is folded across shards like a probe-latched word."""
+        inj = self._injection_for(shape)
+        if inj is None:
+            return words
         return jnp.bitwise_or(words, jnp.asarray(inj))
 
     # ------------------------------------------------------------- step cycle
@@ -889,6 +943,15 @@ class Replica:
         rem0 = np.zeros(sched.num_slots, np.int64)
         deferred = np.zeros(sched.num_slots, bool)
         extra = ((jnp.asarray(self.page_table),) if self.paged else ())
+        if self.tp > 1:
+            # per-shard injection rides into the shard_mapped window as its
+            # trailing (tp, K, S) operand: each shard ORs its slice into its
+            # local words BEFORE the cross-shard fold, so an injected word —
+            # like a probe-latched one — latches identically on every shard
+            inj = self._injection_for((self.tp, K, sched.num_slots))
+            if inj is None:
+                inj = np.zeros((self.tp, K, sched.num_slots), np.uint32)
+            extra = extra + (jnp.asarray(inj),)
         if self.overlap:
             chunk = np.zeros((K, chunk_width, sched.num_slots), np.int32)
             rem = np.zeros((sched.num_slots,), np.int32)
@@ -959,7 +1022,9 @@ class Replica:
         self._dev_tokens = next_tok
         if not self.speculate:
             self._dev_pos = self._dev_pos + K
-        words = self._inject_words(words, (K, sched.num_slots))
+        if self.tp <= 1:
+            # TP injection already rode the window (pre-fold, device-side)
+            words = self._inject_words(words, (K, sched.num_slots))
         combined, count, table, hist = self._wenum(words, jnp.asarray(mask))
         fut = DeviceFuture(outputs=outputs, word=combined, count=count,
                            table=table, history=hist)
@@ -1189,6 +1254,16 @@ class Replica:
                     slot=slot, window=win.index, step=step_i, code=word,
                     code_names=[c.name for c in ErrorCode(word).classes()],
                     action=decision.action.value)
+            if self.tp > 1:
+                # reconciliation fan-out: the OR-folded word latched on EVERY
+                # shard of the model mesh — one instant per shard, so the
+                # post-mortem can check that no shard missed (or diverged
+                # from) the fault its peers recovered from
+                for shard in range(self.tp):
+                    self.trace.instant(
+                        "shard_fanout", "shard", ts=t_fault,
+                        tid=SHARD_TID + shard, shard=shard, tp=self.tp,
+                        window=win.index, code=int(exc.combined_code))
         if decision.action is Action.ROLLBACK:
             targets, fail_now = list(self.sched.active_slots()), False
         elif decision.action is Action.ABORT:

@@ -211,3 +211,43 @@ def cache_shardings(cache_shapes, mesh: Mesh, *, shard_seq: bool = False,
         lambda s: NamedSharding(mesh, s),
         cache_specs(cache_shapes, mesh, shard_seq=shard_seq,
                     seq_over_model=seq_over_model))
+
+
+def tp_leaf_spec(shape, size: int, axis: str = "model",
+                 floor: int = 1) -> P:
+    """TP *storage* spec for one leaf: shard the LAST dim divisible by the
+    axis size, searching backwards, never a dim below ``floor`` (dim 0 is the
+    slot/pool/page identity dim of serve-cache trees — sharding it would
+    split the batch/page address space, not the model). Replicated when no
+    dim divides."""
+    for i in range(len(shape) - 1, floor - 1, -1):
+        if shape[i] % size == 0 and shape[i] >= size:
+            parts: list = [None] * len(shape)
+            parts[i] = axis
+            return P(*parts)
+    return P()
+
+
+def tp_storage_specs(tree, mesh: Mesh, *, axis: str = "model",
+                     floor: int = 1):
+    """Leaf-wise tensor-parallel storage specs for a serve-cache tree.
+
+    Unlike :func:`cache_specs` (training-side, path-pattern driven, DP+TP),
+    this is the serving-TP storage rule: each leaf keeps its leading
+    slot/pool dim whole and shards one trailing feature dim over ``axis``
+    where divisible. Compute stays replicated — the TP window program
+    all-gathers these leaves back to full tensors before the (unchanged)
+    scan body runs, which is what keeps the token stream bit-exact vs the
+    single-device engine (DESIGN §3.8). Use
+    :meth:`repro.launch.paging.PagedLayout.tp_storage_specs` for hybrid
+    paged trees (it raises the floor past the page dims)."""
+    size = mesh.shape[axis]
+    return jax.tree_util.tree_map(
+        lambda leaf: tp_leaf_spec(leaf.shape, size, axis, floor), tree)
+
+
+def tp_storage_shardings(tree, mesh: Mesh, *, axis: str = "model",
+                         floor: int = 1):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tp_storage_specs(tree, mesh, axis=axis, floor=floor))

@@ -263,13 +263,16 @@ class TestRunnerIntegration:
         # cannot even express this (Op validates at run), so go through a
         # hand-rolled injector to pin the replica-side guard
         from repro.fuzz.runner import get_kit
+        from repro.serve.config import EngineConfig
         from repro.serve.queue import Request
         from repro.serve.replica import Replica
 
         kit = get_kit("overlap")
-        rep = Replica(kit.cfg, params=kit.params, num_slots=2, max_len=32,
+        rep = Replica(kit.cfg, params=kit.params,
+                      config=EngineConfig(num_slots=2, max_len=32, window=4,
+                                          overlap=True),
                       decode_fn=kit.decode_fn, prefill_fn=kit.prefill_fn,
-                      window=4, window_fn=kit.window_fn, overlap=True,
+                      window_fn=kit.window_fn,
                       fault_injector=lambda i, shape: np.full(
                           shape, int(ErrorCode.DRAFT_REJECT), np.uint32))
         assert rep.submit(Request(id=0, prompt=(5, 6, 7),

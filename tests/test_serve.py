@@ -17,11 +17,13 @@ from repro.serve import (
     REJECTED,
     AdmissionPolicy,
     ContinuousBatchingScheduler,
+    EngineConfig,
     Replica,
     Request,
     RequestQueue,
     ServeGroup,
 )
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 
@@ -137,10 +139,11 @@ def serve_env():
 
 def _replica(env, **kw):
     cfg, params, decode_fn, prefill_fn = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", 48)
-    return Replica(cfg, params=params, decode_fn=decode_fn,
-                   prefill_fn=prefill_fn, **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", 48)
+    return Replica(cfg, params=params, config=EngineConfig(**conf),
+                   decode_fn=decode_fn, prefill_fn=prefill_fn, **kw)
 
 
 def _serve_all(rep, reqs, inject_at=None):
@@ -253,7 +256,7 @@ def test_slot_decode_matches_single_sequence_prefill(serve_env):
 @pytest.fixture(scope="module")
 def group():
     cfg = smoke_config("recurrentgemma-2b")
-    return ServeGroup(cfg, 3, num_slots=2, max_len=48)
+    return ServeGroup(cfg, 3, config=EngineConfig(num_slots=2, max_len=48))
 
 
 def test_group_survives_replica_kill_with_zero_dropped_requests(group):

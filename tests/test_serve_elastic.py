@@ -24,6 +24,7 @@ from repro.configs import smoke_config
 from repro.core.faults import FaultSchedule, FaultSpec
 from repro.obs import postmortem
 from repro.obs.trace import NULL_TRACER, merge_trace_dicts
+from repro.serve.config import EngineConfig
 from repro.serve.group import AutoscalePolicy, ServeGroup
 from repro.serve.ledger import (
     GroupLedger,
@@ -161,8 +162,8 @@ class TestRequeueOrdering:
 @pytest.fixture(scope="module")
 def group():
     return ServeGroup(smoke_config("recurrentgemma-2b"), 3, max_ranks=4,
-                      num_slots=2, max_len=48, window=4, overlap=True,
-                      trace=True)
+                      config=EngineConfig(num_slots=2, max_len=48, window=4,
+                                          overlap=True, trace=True))
 
 
 # --------------------------------------------------------------- autoscaler

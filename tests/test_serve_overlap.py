@@ -28,10 +28,12 @@ from repro.serve import (
     OK,
     AdmissionPolicy,
     ContinuousBatchingScheduler,
+    EngineConfig,
     Replica,
     Request,
     RequestQueue,
 )
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 64
@@ -46,9 +48,11 @@ def env():
 
 def _replica(env, window, **kw):
     cfg, params = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", MAX_LEN)
-    return Replica(cfg, params=params, window=window, **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", MAX_LEN)
+    return Replica(cfg, params=params,
+                   config=EngineConfig(window=window, **conf), **kw)
 
 
 def _requests(n, max_new=12, prompt_len=3):

@@ -26,7 +26,8 @@ from repro.core.errors import ErrorCode
 from repro.launch.paging import PagedLayout, pages_for
 from repro.launch.steps import make_cache_prefill, make_chunked_prefill
 from repro.models import build_model
-from repro.serve import OK, Replica, Request
+from repro.serve import OK, EngineConfig, Replica, Request
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 32
@@ -43,12 +44,14 @@ def env():
 
 def _replica(env, *, paged, **kw):
     cfg, params = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", MAX_LEN)
-    kw.setdefault("window", WINDOW)
-    kw.setdefault("max_request_retries", 4)
-    return Replica(cfg, params=params, paged=paged,
-                   page_size=kw.pop("page_size", PAGE), **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", MAX_LEN)
+    conf.setdefault("window", WINDOW)
+    conf.setdefault("max_request_retries", 4)
+    conf.setdefault("page_size", PAGE)
+    return Replica(cfg, params=params,
+                   config=EngineConfig(paged=paged, **conf), **kw)
 
 
 def _requests(n, max_new=8, prompt_len=5):
@@ -320,8 +323,10 @@ def test_paged_degenerates_cleanly_without_pageable_leaves():
     params = build_model(cfg).init(jax.random.PRNGKey(0))
 
     def serve(paged):
-        rep = Replica(cfg, params=params, num_slots=2, max_len=MAX_LEN,
-                      window=WINDOW, paged=paged, page_size=PAGE)
+        rep = Replica(cfg, params=params,
+                      config=EngineConfig(num_slots=2, max_len=MAX_LEN,
+                                          window=WINDOW, paged=paged,
+                                          page_size=PAGE))
         return rep, _serve_all(rep, _requests(3))
 
     _, base = serve(False)
@@ -342,8 +347,10 @@ def test_paged_group_kill_zero_dropped_requests(env):
     from repro.serve import ServeGroup
 
     cfg, _ = env
-    group = ServeGroup(cfg, 3, num_slots=2, max_len=MAX_LEN, window=WINDOW,
-                       paged=True, page_size=PAGE)
+    group = ServeGroup(cfg, 3,
+                       config=EngineConfig(num_slots=2, max_len=MAX_LEN,
+                                           window=WINDOW, paged=True,
+                                           page_size=PAGE))
     reqs = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=6)
             for i in range(9)]
     res = group.serve(reqs, faults=FaultSchedule(
@@ -384,7 +391,7 @@ def test_paged_requires_window_mode(env):
         _replica(env, paged=True, window=0)
     # the group must fail at construction too, not as N thread deaths later
     with pytest.raises(ValueError, match="window"):
-        ServeGroup(cfg, 2, paged=True, window=0)
+        ServeGroup(cfg, 2, config=EngineConfig(paged=True, window=0))
 
 
 def test_oversized_watermark_request_still_served(env):

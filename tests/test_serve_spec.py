@@ -17,7 +17,8 @@ from repro.core.device_channel import DeviceFuture
 from repro.core.errors import ATTRIBUTION_ONLY, ErrorCode
 from repro.launch.steps import PerfOptions, make_speculative_decode_window
 from repro.models import build_model
-from repro.serve import EXPIRED, OK, Replica, Request, ServeGroup
+from repro.serve import EXPIRED, OK, EngineConfig, Replica, Request, ServeGroup
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import make_window_enum_fn
 
 MAX_LEN = 64
@@ -34,11 +35,14 @@ def env():
 
 def _replica(env, *, speculate, **kw):
     cfg, params = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", MAX_LEN)
-    kw.setdefault("max_request_retries", 6)
-    return Replica(cfg, params=params, window=K, overlap=True,
-                   speculate=speculate, draft_len=D, draft_layers=1, **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", MAX_LEN)
+    conf.setdefault("max_request_retries", 6)
+    return Replica(cfg, params=params,
+                   config=EngineConfig(window=K, overlap=True,
+                                       speculate=speculate, draft_len=D,
+                                       draft_layers=1, **conf), **kw)
 
 
 def _requests(n, max_new=16, prompt_len=9):
@@ -294,9 +298,11 @@ def test_host_sync_budget(env, monkeypatch):
 def test_spec_validation(env):
     cfg, params = env
     with pytest.raises(ValueError, match="window"):
-        Replica(cfg, params=params, speculate=True, window=0)
+        Replica(cfg, params=params,
+                config=EngineConfig(speculate=True, window=0))
     with pytest.raises(ValueError, match="overlap"):
-        Replica(cfg, params=params, speculate=True, window=8, overlap=False)
+        Replica(cfg, params=params,
+                config=EngineConfig(speculate=True, window=8, overlap=False))
     with pytest.raises(ValueError, match="full-attention"):
         make_speculative_decode_window(smoke_config("recurrentgemma-2b"),
                                        window=8, draft_len=2, draft_layers=1)
@@ -308,7 +314,7 @@ def test_spec_validation(env):
                                        draft_layers=1)
     rec = smoke_config("recurrentgemma-2b")
     with pytest.raises(ValueError, match="full-attention"):
-        Replica(rec, window=8, speculate=True)
+        Replica(rec, config=EngineConfig(window=8, speculate=True))
 
 
 def test_perf_options_spec_knobs():
@@ -322,8 +328,10 @@ def test_spec_serve_group(env):
     """ServeGroup threads speculation through shared jitted programs: the
     fleet serves to completion with every response OK and acceptance > 0."""
     cfg, _ = env
-    group = ServeGroup(cfg, nranks=2, num_slots=2, max_len=MAX_LEN,
-                       window=K, speculate=True, draft_len=D, draft_layers=1)
+    group = ServeGroup(cfg, nranks=2,
+                       config=EngineConfig(num_slots=2, max_len=MAX_LEN,
+                                           window=K, speculate=True,
+                                           draft_len=D, draft_layers=1))
     reqs = _requests(6, max_new=10)
     result = group.serve(reqs)
     assert sorted(result.responses) == [r.id for r in reqs]

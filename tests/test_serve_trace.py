@@ -22,7 +22,15 @@ from repro.obs import (
     request_timelines,
     validate,
 )
-from repro.serve import OK, Replica, Request, ServeGroup, ServeMetrics
+from repro.serve import (
+    OK,
+    EngineConfig,
+    Replica,
+    Request,
+    ServeGroup,
+    ServeMetrics,
+)
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 
 MAX_LEN = 64
 
@@ -36,11 +44,13 @@ def env():
 
 def _replica(env, tracer, **kw):
     cfg, params = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", MAX_LEN)
-    kw.setdefault("window", 4)
-    kw.setdefault("max_request_retries", 6)
-    return Replica(cfg, params=params, tracer=tracer, **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", MAX_LEN)
+    conf.setdefault("window", 4)
+    conf.setdefault("max_request_retries", 6)
+    return Replica(cfg, params=params, config=EngineConfig(**conf),
+                   tracer=tracer, **kw)
 
 
 def _requests(n, max_new=10):
@@ -189,9 +199,11 @@ def test_paged_page_events_and_eviction_requeue():
     trace id, and the evicted request still finishes OK."""
     cfg = smoke_config("qwen3-1.7b")
     tr = Tracer()
-    rep = Replica(cfg, num_slots=4, max_len=64, window=4, overlap=True,
-                  max_request_retries=6, paged=True, page_size=16,
-                  page_budget=8, tracer=tr)
+    rep = Replica(cfg, config=EngineConfig(num_slots=4, max_len=64, window=4,
+                                           overlap=True,
+                                           max_request_retries=6, paged=True,
+                                           page_size=16, page_budget=8),
+                  tracer=tr)
     reqs = [Request(id=i, prompt=tuple(3 + i + j for j in range(8)),
                     max_new_tokens=12) for i in range(6)]
     out = _serve(rep, reqs)
@@ -220,9 +232,12 @@ def test_spec_draft_events_and_fault_word_strips_reject_bits():
     masked by them it bit-matches the fault-raising combined word."""
     cfg = smoke_config("qwen3-1.7b")
     tr = Tracer()
-    rep = Replica(cfg, num_slots=2, max_len=64, window=4, overlap=True,
-                  max_request_retries=6, speculate=True, draft_len=2,
-                  draft_layers=1, seed=0, tracer=tr)
+    rep = Replica(cfg, config=EngineConfig(num_slots=2, max_len=64, window=4,
+                                           overlap=True,
+                                           max_request_retries=6,
+                                           speculate=True, draft_len=2,
+                                           draft_layers=1),
+                  seed=0, tracer=tr)
     reqs = [Request(id=i, prompt=tuple(5 + i + j for j in range(6)),
                     max_new_tokens=10) for i in range(3)]
     out = _serve(rep, reqs, inject_at=3)
@@ -252,8 +267,8 @@ def test_group_kill_shrink_reroute_one_connected_trace():
     merged trace: kill -> ulfm_shrink on every survivor -> reroute per moved
     request -> the re-routed requests' terminal spans on their new owner."""
     cfg = smoke_config("recurrentgemma-2b")
-    group = ServeGroup(cfg, 3, num_slots=2, max_len=48, window=4,
-                       trace=True)
+    group = ServeGroup(cfg, 3, config=EngineConfig(num_slots=2, max_len=48,
+                                                   window=4, trace=True))
     reqs = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=5)
             for i in range(9)]
     res = group.serve(reqs, faults=FaultSchedule(

@@ -13,7 +13,8 @@ from repro.configs import smoke_config
 from repro.core.errors import ErrorCode
 from repro.launch.steps import PerfOptions, make_cache_prefill
 from repro.models import build_model
-from repro.serve import FAILED, OK, Replica, Request, ServeGroup
+from repro.serve import FAILED, OK, EngineConfig, Replica, Request, ServeGroup
+from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 64
@@ -28,9 +29,11 @@ def env():
 
 def _replica(env, window, **kw):
     cfg, params = env
-    kw.setdefault("num_slots", 2)
-    kw.setdefault("max_len", MAX_LEN)
-    return Replica(cfg, params=params, window=window, **kw)
+    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf.setdefault("num_slots", 2)
+    conf.setdefault("max_len", MAX_LEN)
+    return Replica(cfg, params=params,
+                   config=EngineConfig(window=window, **conf), **kw)
 
 
 def _requests(n, max_new=12):
@@ -143,7 +146,8 @@ def test_window_group_kill_zero_dropped_requests(env):
     from repro.core.faults import FaultSchedule, FaultSpec
 
     cfg, _ = env
-    group = ServeGroup(cfg, 3, num_slots=2, max_len=MAX_LEN, window=4)
+    group = ServeGroup(cfg, 3, config=EngineConfig(num_slots=2,
+                                                   max_len=MAX_LEN, window=4))
     reqs = [Request(id=i, prompt=(5 + i, 6 + i, 7 + i), max_new_tokens=6)
             for i in range(9)]
     res = group.serve(reqs, faults=FaultSchedule(
