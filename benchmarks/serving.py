@@ -56,10 +56,19 @@ faulted traffic is token-bit-exact vs untraced, the dumped trace round-trips
 through ``scripts/trace_tool.py --check``), ``--smoke --elastic`` the CI
 elastic gate (kill a rank, crash the whole fleet mid-flight, restart from
 the write-ahead ledger alone, regrow via the non-blocking join — zero
-drops, bit-exact streams, merged two-incarnation trace validates) and
+drops, bit-exact streams, merged two-incarnation trace validates),
 ``--smoke --tp`` the CI tensor-parallel gate (tp=2 token-bit-exact vs the
 single-device engine steady AND under a one-shard injection, shard loss
-inside a group shrinks with zero drops, dumped trace validates).
+inside a group shrinks with zero drops, dumped trace validates) and
+``--smoke --multihost`` the CI multi-host gate (3 real worker *processes*
+under the heartbeat supervisor; one is SIGKILL'd mid-decode — detected,
+evicted within 2× the suspect timeout, outstanding requests re-routed from
+the WAL with zero drops and bit-exact streams vs an in-process reference;
+one is SIGSTOP'd for less than the suspect timeout — suspected but never
+evicted; the merged trace passes ``trace_tool.py --check``).
+
+All file artifacts the smokes write (traces, WALs) land under the
+gitignored ``artifacts/`` directory (override with ``REPRO_ARTIFACTS``).
 """
 from __future__ import annotations
 
@@ -72,6 +81,16 @@ import jax
 
 from repro.configs import smoke_config
 from repro.serve import EngineConfig, Replica, Request
+
+#: Every smoke/bench file artifact (traces, WALs) lands under this gitignored
+#: directory — CI uploads it wholesale, the repo root stays clean.
+ARTIFACTS_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def _artifact(name: str) -> str:
+    os.makedirs(ARTIFACTS_DIR, exist_ok=True)
+    return os.path.join(ARTIFACTS_DIR, name)
+
 
 N_REQUESTS = 12
 PROMPT_LEN = 16     # long prompts: admission/recovery prefill is real work
@@ -787,7 +806,7 @@ def smoke_spec(window: int = WINDOW) -> None:
 
 
 def smoke_trace(window: int = WINDOW,
-                out_path: str = "trace-smoke.json") -> None:
+                out_path: str | None = None) -> None:
     """CI trace gate: on identical faulted overlap traffic, a replica with an
     enabled tracer must emit a token-bit-exact stream vs the no-op default
     (tracing is pure observation), the default must record zero events, and
@@ -795,6 +814,7 @@ def smoke_trace(window: int = WINDOW,
     request reaches exactly one terminal span, every fault event resolves to
     a recovery lane or a terminal answer (``trace_tool.py --check`` runs the
     same validation on the artifact this gate writes)."""
+    out_path = out_path or _artifact("trace-smoke.json")
     from repro.obs import Tracer, dump_trace, request_timelines, validate
 
     cfg = smoke_config("recurrentgemma-2b")
@@ -850,8 +870,8 @@ def smoke_trace(window: int = WINDOW,
 
 
 def smoke_elastic(window: int = WINDOW,
-                  out_path: str = "elastic-smoke-trace.json",
-                  ledger_path: str = "elastic-smoke.wal") -> None:
+                  out_path: str | None = None,
+                  ledger_path: str | None = None) -> None:
     """CI elastic gate: the ISSUE-8 acceptance story at smoke scale. A 3-rank
     group serves 24 requests with the durable ledger on; rank 2 is killed at
     round 2 (ULFM shrink + re-route), then the WHOLE fleet stops at round 4 —
@@ -862,6 +882,8 @@ def smoke_elastic(window: int = WINDOW,
     and the merged two-incarnation trace passes the post-mortem check
     (``trace_tool.py --check`` re-validates the artifacts this gate writes —
     the ledger and trace CI uploads are the ones that passed)."""
+    out_path = out_path or _artifact("elastic-smoke-trace.json")
+    ledger_path = ledger_path or _artifact("elastic-smoke.wal")
     from repro.core.faults import FaultSchedule, FaultSpec
     from repro.obs import validate
     from repro.obs.trace import merge_trace_dicts
@@ -909,7 +931,7 @@ def smoke_elastic(window: int = WINDOW,
 
 
 def smoke_tp(window: int = WINDOW,
-             out_path: str = "tp-smoke-trace.json") -> None:
+             out_path: str | None = None) -> None:
     """CI tensor-parallel gate: the ISSUE-9 acceptance story at smoke scale.
 
     (1) *Bit-exactness*: the ``tp=2`` engine (storage sharded over the
@@ -923,6 +945,7 @@ def smoke_tp(window: int = WINDOW,
     re-route, zero dropped requests — and the dumped group trace passes the
     post-mortem check, shard-fanout rules included (``trace_tool.py --check``
     re-validates the artifact this gate writes)."""
+    out_path = out_path or _artifact("tp-smoke-trace.json")
     import numpy as np
 
     from repro.core.errors import ErrorCode
@@ -1009,6 +1032,124 @@ def smoke_tp(window: int = WINDOW,
           f"-> {out_path}, validate OK")
 
 
+def smoke_multihost(out_path: str | None = None,
+                    ledger_path: str | None = None) -> None:
+    """CI multi-host gate: the ISSUE-10 acceptance story at smoke scale.
+
+    (1) *SIGKILL leg* (real engine): 3 worker **processes**, each owning one
+    real :class:`Replica` (params rebuilt per process from the shared
+    PRNGKey), serve 9 requests under the heartbeat supervisor with the
+    durable WAL on; worker 1 is SIGKILL'd once 2 responses have been retired
+    fleet-wide. The dead process must be *detected* by missed heartbeats
+    (suspect → evict, never by the socket EOF shortcut), *mapped*
+    (``RANK_FAILED`` latched into the surviving group word) and *repaired*
+    (epoch shrink agreed over the socket transport, outstanding requests
+    re-routed from the WAL) — zero drops, every stream token-bit-exact vs an
+    in-process single-replica reference, detection-to-evict within
+    ``2 × suspect_timeout``, and at least one survivor retirement lands
+    *inside* the detection window (survivors never block on the dead peer).
+    (2) *SIGSTOP leg* (sim backend): a worker stopped for half the suspect
+    timeout and resumed must be suspected and then **cleared — never
+    evicted** (the slow-but-alive false-positive guard), still zero drops
+    and bit-exact. The merged two-leg trace passes the post-mortem check,
+    host-eviction rules included (``trace_tool.py --check`` re-validates
+    the artifact this gate writes)."""
+    out_path = out_path or _artifact("multihost-smoke-trace.json")
+    ledger_path = ledger_path or _artifact("multihost-smoke.wal")
+    from repro.core.faults import FaultSchedule, FaultSpec
+    from repro.obs import validate
+    from repro.obs.trace import merge_trace_dicts
+    from repro.serve import MultiHostSupervisor, sim_tokens
+
+    if os.path.exists(ledger_path):
+        os.remove(ledger_path)   # a prior run's WAL must not replay into ours
+    arch = "qwen3-1.7b"
+    suspect_timeout = 0.8
+    n = 9
+    mk = lambda: [Request(id=i, prompt=tuple(5 + i + j for j in range(8)),
+                          max_new_tokens=12) for i in range(n)]
+    engine = EngineConfig(num_slots=2, max_len=32)
+
+    # in-process reference: same arch/seed/engine as every worker process
+    from repro.models import build_model
+    cfg = smoke_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ref_rep = Replica(cfg, params=params, config=engine)
+    ref, steps = {}, 0
+    for r in mk():
+        assert ref_rep.submit(r) is None
+    while not ref_rep.idle():
+        for resp in ref_rep.step():
+            ref[resp.id] = resp
+        steps += 1
+        assert steps < 2000
+    assert sorted(ref) == list(range(n))
+
+    # --- SIGKILL leg: real replicas across real process boundaries
+    sup = MultiHostSupervisor(3, backend="replica", arch=arch, config=engine,
+                              suspect_timeout=suspect_timeout,
+                              heartbeat_interval=0.05, trace=True,
+                              ledger_path=ledger_path, timeout=180.0)
+    res = sup.serve(mk(), faults=FaultSchedule(
+        [FaultSpec(step=2, kind="host_kill", rank=1)]))
+    assert sorted(res.responses) == list(range(n)), (
+        "dropped requests across the host loss")
+    assert all(r.ok for r in res.responses.values())
+    for i, resp in res.responses.items():
+        assert tuple(resp.tokens) == tuple(ref[i].tokens), (
+            f"request {i} diverged from the in-process reference — the "
+            "process boundary / eviction / re-route leaked into the stream")
+    assert res.evicted == (1,), f"expected worker 1 evicted, got {res.evicted}"
+    assert res.rerouted, "no requests were re-routed off the dead worker"
+    det = res.detection[1]
+    lat = det["evict_ts"] - det["kill_ts"]
+    assert lat <= 2 * suspect_timeout, (
+        f"detection-to-evict {lat:.3f}s exceeds 2x suspect_timeout")
+    mid = [rid for (ts, rank, rid) in res.retires
+           if det["kill_ts"] < ts < det["evict_ts"] and rank != 1]
+    assert mid, ("no survivor retired a response inside the detection "
+                 "window — survivors blocked on the dead peer")
+
+    # --- SIGSTOP leg: paused-then-resumed worker must NOT be evicted
+    sup2 = MultiHostSupervisor(3, backend="sim",
+                               suspect_timeout=suspect_timeout,
+                               heartbeat_interval=0.05, trace=True,
+                               sim_tokens_per_step=2, sim_step_delay_s=0.01,
+                               timeout=120.0)
+    # distinct ids: the merged two-leg trace must keep one terminal span
+    # per traced request
+    reqs2 = [Request(id=100 + i, prompt=tuple(5 + i + j for j in range(8)),
+                     max_new_tokens=12) for i in range(n)]
+    res2 = sup2.serve(reqs2, faults=FaultSchedule(
+        [FaultSpec(step=1, kind="host_stop", rank=2,
+                   magnitude=0.5 * suspect_timeout)]))
+    assert sorted(res2.responses) == [100 + i for i in range(n)]
+    for rid, resp in res2.responses.items():
+        assert tuple(resp.tokens) == sim_tokens(
+            tuple(5 + (rid - 100) + j for j in range(8)), 12), (
+            f"request {rid} diverged from the sim oracle under SIGSTOP")
+    assert res2.evicted == (), (
+        f"SIGSTOP within the suspect timeout must never evict, "
+        f"got {res2.evicted}")
+    assert 2 in res2.stopped and 2 in res2.suspected and 2 in res2.resumed, (
+        "the stop leg never exercised the suspect -> clear path")
+
+    trace = merge_trace_dicts(res.trace(), res2.trace())
+    problems = validate(trace)
+    assert not problems, problems
+    names = {e.get("name") for e in trace["traceEvents"]}
+    assert {"host_kill", "host_suspect", "host_evict", "ulfm_shrink",
+            "reroute", "epoch", "host_stop", "host_suspect_clear"} <= names, (
+        f"host causality chain incomplete: {sorted(names)}")
+    with open(out_path, "w") as f:
+        json.dump(trace, f)
+    print(f"multihost smoke: {len(res.responses)}/{n} answered after "
+          f"SIGKILL of worker 1 (bit-exact, {len(res.rerouted)} re-routed, "
+          f"evict {lat:.2f}s <= {2 * suspect_timeout:.2f}s, {len(mid)} "
+          f"survivor retires in-window); SIGSTOP leg suspected+cleared, "
+          f"0 evictions -> {out_path}, {ledger_path}")
+
+
 if __name__ == "__main__":
     import sys
 
@@ -1025,6 +1166,8 @@ if __name__ == "__main__":
             smoke_elastic()
         elif "--tp" in sys.argv:
             smoke_tp()
+        elif "--multihost" in sys.argv:
+            smoke_multihost()
         else:
             smoke()
     else:

@@ -39,15 +39,22 @@ All acts run with fault-causality tracing on (``repro.obs``, DESIGN
 §3.5/§3.7): every request's life is a span chain, every fault event carries
 the exact device error word, and the merged traces — kill → shrink →
 re-route → fleet stop → ledger replay → rejoin included — are dumped to
-``serve-trace.json`` / ``serve-crash-trace.json`` (open them in Perfetto, or
-run ``python scripts/trace_tool.py <file> --chains``) and pretty-printed
-here.
+``artifacts/serve-trace.json`` / ``artifacts/serve-crash-trace.json`` (open
+them in Perfetto, or run ``python scripts/trace_tool.py <file> --chains``)
+and pretty-printed here.
 """
 import json
 import os
 import sys
 
 sys.path.insert(0, "src")
+
+ARTIFACTS = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def _artifact(name):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    return os.path.join(ARTIFACTS, name)
 
 from repro.configs import smoke_config  # noqa: E402
 from repro.core.faults import FaultSchedule, FaultSpec  # noqa: E402
@@ -136,12 +143,13 @@ def act2_hard_fault(cfg):
     # the merged trace stitches all three ranks — the dead one included —
     # into one causal object: kill -> ulfm shrink -> ledger re-route ->
     # terminal answers on the survivors
-    trace = dump_trace("serve-trace.json", *(result.tracers[r]
-                                             for r in sorted(result.tracers)))
+    trace_path = _artifact("serve-trace.json")
+    trace = dump_trace(trace_path, *(result.tracers[r]
+                                     for r in sorted(result.tracers)))
     problems = validate(trace)
     assert not problems, problems
     n = len(trace["traceEvents"])
-    print(f"  trace: {n} events from 3 replicas -> serve-trace.json "
+    print(f"  trace: {n} events from 3 replicas -> {trace_path} "
           "(perfetto/chrome://tracing, or scripts/trace_tool.py)")
     for c in group_chains(trace):
         routed = ", ".join(
@@ -159,7 +167,7 @@ def act2_hard_fault(cfg):
 
 def act3_crash_replay_regrow(cfg):
     print("=== Act 3: fleet crash -> ledger replay -> elastic regrow ===")
-    ledger_path = "serve-ledger.wal"
+    ledger_path = _artifact("serve-ledger.wal")
     if os.path.exists(ledger_path):
         os.remove(ledger_path)      # a stale log must not replay into this run
     group = ServeGroup(cfg, 3, max_ranks=3,
@@ -197,14 +205,15 @@ def act3_crash_replay_regrow(cfg):
     trace = merge_trace_dicts(r1.trace(), r2.trace())
     problems = validate(trace)
     assert not problems, problems
-    with open("serve-crash-trace.json", "w") as f:
+    crash_path = _artifact("serve-crash-trace.json")
+    with open(crash_path, "w") as f:
         json.dump(trace, f)
     names = [e["name"] for e in trace["traceEvents"] if e.get("cat") == "group"]
     story = [n for n in ("replica_kill", "ulfm_shrink", "fleet_stop",
                          "ledger_replay", "state_transfer", "replica_join")
              if n in names]
     print(f"  merged trace: {len(trace['traceEvents'])} events, group story "
-          f"{' -> '.join(story)} -> serve-crash-trace.json")
+          f"{' -> '.join(story)} -> {crash_path}")
     for c in group_chains(trace):
         if c["rejoins"]:
             a = c["rejoins"][0].get("args") or {}

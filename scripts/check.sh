@@ -84,11 +84,17 @@ stage "overlap smoke" run_bench_smoke --overlap
 echo "== paged smoke: benchmarks.serving --smoke --paged =="
 stage "paged smoke" run_bench_smoke --paged
 
-# trace smoke writes trace-smoke.json; the post-mortem CLI then re-validates
-# it from disk — the artifact CI uploads is the one that passed the check
+# every smoke writes its file artifacts (traces, WALs, fuzz state) under
+# this gitignored directory — CI uploads it wholesale, the repo root stays
+# clean (benchmarks.serving honours the same default)
+ARTIFACTS="${REPRO_ARTIFACTS:-artifacts}"
+
+# trace smoke writes artifacts/trace-smoke.json; the post-mortem CLI then
+# re-validates it from disk — the artifact CI uploads is the one that
+# passed the check
 run_trace_smoke() {
     run_bench_smoke --trace \
-        && python scripts/trace_tool.py trace-smoke.json --check
+        && python scripts/trace_tool.py "$ARTIFACTS/trace-smoke.json" --check
 }
 echo "== trace smoke: benchmarks.serving --smoke --trace + trace_tool =="
 stage "trace smoke" run_trace_smoke
@@ -100,7 +106,8 @@ stage "trace smoke" run_trace_smoke
 # that passed
 run_elastic_smoke() {
     run_bench_smoke --elastic \
-        && python scripts/trace_tool.py elastic-smoke-trace.json --check
+        && python scripts/trace_tool.py \
+            "$ARTIFACTS/elastic-smoke-trace.json" --check
 }
 echo "== elastic smoke: benchmarks.serving --smoke --elastic + trace_tool =="
 stage "elastic smoke" run_elastic_smoke
@@ -111,20 +118,35 @@ stage "elastic smoke" run_elastic_smoke
 run_tp_smoke() {
     XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}" \
         run_bench_smoke --tp \
-        && python scripts/trace_tool.py tp-smoke-trace.json --check
+        && python scripts/trace_tool.py "$ARTIFACTS/tp-smoke-trace.json" --check
 }
 echo "== tp smoke: benchmarks.serving --smoke --tp + trace_tool =="
 stage "tp smoke" run_tp_smoke
 
+# multi-host smoke: 3 real worker processes under the heartbeat supervisor;
+# SIGKILL one mid-decode (detect -> evict -> WAL re-route, zero drops,
+# bit-exact) and SIGSTOP another inside the suspect timeout (suspected,
+# cleared, never evicted); the merged trace re-validates from disk.
+# Time-boxed: a hung worker/supervisor must fail the stage, not wedge CI.
+run_multihost_smoke() {
+    timeout 300 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.serving --smoke --multihost \
+        && python scripts/trace_tool.py \
+            "$ARTIFACTS/multihost-smoke-trace.json" --check
+}
+echo "== multihost smoke: benchmarks.serving --smoke --multihost + trace_tool =="
+stage "multihost smoke" run_multihost_smoke
+
 # time-boxed coverage-guided fuzz sweep over two representative engines; a
 # nonzero exit means a reproducible counterexample was found (and written to
 # tests/fuzz_corpus by a full run — the smoke uses --no-promote so CI never
-# commits corpus entries, it only fails loudly and uploads fuzz-out/)
+# commits corpus entries, it only fails loudly and uploads artifacts/fuzz-out/)
 run_fuzz_smoke() {
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python scripts/fuzz.py --budget 8 --seed 0 \
         --engines overlap,overlap_paged --time-box 300 --no-promote \
-        --db fuzz-out/coverage_db.json --report fuzz-out/report.json
+        --db "$ARTIFACTS/fuzz-out/coverage_db.json" \
+        --report "$ARTIFACTS/fuzz-out/report.json"
 }
 echo "== fuzz smoke: scripts/fuzz.py --budget 8 --time-box 300 =="
 stage "fuzz smoke" run_fuzz_smoke

@@ -43,9 +43,9 @@ def main(argv=None) -> int:
                     help="campaign seed: trajectories replay from it")
     ap.add_argument("--corpus", default="tests/fuzz_corpus",
                     help="directory for counterexample / seed entries")
-    ap.add_argument("--db", default="fuzz-out/coverage_db.json",
+    ap.add_argument("--db", default="artifacts/fuzz-out/coverage_db.json",
                     help="persisted coverage DB (JSON)")
-    ap.add_argument("--report", default="fuzz-out/report.json",
+    ap.add_argument("--report", default="artifacts/fuzz-out/report.json",
                     help="campaign report path (JSON)")
     ap.add_argument("--engines", default=None,
                     help=f"comma-separated subset of {','.join(ENGINES)}")

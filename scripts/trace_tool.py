@@ -18,14 +18,20 @@ faulted run:
 
 ``--check`` runs the same round-trip validation the CI trace smoke relies on
 (every traced request reaches exactly one terminal span, every fault
-resolves, every kill chains to a shrink) and exits non-zero on any problem.
+resolves, every kill chains to a shrink, every host eviction was preceded by
+detector suspicion and followed by an epoch that excludes the dead host) and
+exits non-zero on any problem.
+
+The CI smokes write their trace dumps under the gitignored ``artifacts/``
+directory — e.g. ``artifacts/trace-smoke.json``,
+``artifacts/multihost-smoke-trace.json``.
 
 Usage:
-  python scripts/trace_tool.py trace.json                 # report everything
-  python scripts/trace_tool.py trace.json --request 7     # one timeline
-  python scripts/trace_tool.py trace.json --faults        # fault report only
-  python scripts/trace_tool.py trace.json --chains        # membership chains
-  python scripts/trace_tool.py trace.json --check         # CI validation
+  python scripts/trace_tool.py artifacts/trace-smoke.json  # report everything
+  python scripts/trace_tool.py trace.json --request 7      # one timeline
+  python scripts/trace_tool.py trace.json --faults         # fault report only
+  python scripts/trace_tool.py trace.json --chains         # membership chains
+  python scripts/trace_tool.py trace.json --check          # CI validation
 """
 from __future__ import annotations
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env python
+"""Standalone multi-host worker entrypoint.
+
+One of these runs per "host" under the :class:`repro.serve.multihost`
+supervisor. It is a thin shim: make ``src/`` importable when launched from a
+checkout, then hand over to :func:`repro.serve.multihost.worker_main`, which
+implements the whole worker protocol (hello → heartbeats → work/exchange →
+retire → trace/bye).
+
+Usage (normally the supervisor launches this for you)::
+
+    python scripts/worker.py --spec '<json worker spec>'
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.serve.multihost import worker_main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(worker_main())

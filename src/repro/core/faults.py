@@ -46,7 +46,12 @@ _INJ_BITS = {
 # model mesh dies, which takes the whole owning replica down (a TP replica is
 # one SPMD program — losing a shard is losing the rank) and rides the exact
 # RANK_FAILED → epoch-shrink → re-route path a full replica kill takes.
-_HOST_KINDS = frozenset({"kill", "shard_kill", "straggle", "user"})
+# "host_kill"/"host_stop" are the *process*-level hard faults: SIGKILL (a
+# genuinely lost OS process) and SIGSTOP (slow-but-alive) of a multihost
+# worker — executed only by the MultiHostSupervisor, which owns the victim
+# Popen handles; apply_host_fault has no process to signal and rejects them.
+_HOST_KINDS = frozenset({"kill", "shard_kill", "straggle", "user",
+                         "host_kill", "host_stop"})
 # every legal FaultSpec.kind: the device-word kinds, the host kinds, and
 # "code" (inject a raw ErrorCode word in-band — the fuzzer's device-fault-word
 # mutation surface, validated by validate_injectable_code)
@@ -248,6 +253,11 @@ def apply_host_fault(spec: FaultSpec, ctx=None) -> Optional[ErrorCode]:
         return ErrorCode.STRAGGLER
     if spec.kind == "user":
         return ErrorCode.USER
+    if spec.kind in ("host_kill", "host_stop"):
+        raise ValueError(
+            f"apply_host_fault: {spec.kind!r} targets a real OS process and "
+            "is executed by the multihost supervisor (it owns the worker "
+            "Popen handles) — the thread-rank cluster has nothing to signal")
     raise ValueError(
         f"apply_host_fault: {spec.kind!r} is not a host fault kind "
         f"(host kinds: {sorted(_HOST_KINDS)}; device kinds are injected "

@@ -1,8 +1,8 @@
 """Coverage-guided fault-injection fuzzer for the serving stack.
 
 Drives the real engines (stepwise / windowed / overlapped / paged /
-speculative replicas and the ULFM ServeGroup) end to end with seeded,
-fully reproducible fault trajectories; measures coverage over the derived
+speculative replicas, the ULFM ServeGroup, and the multihost real-process
+fault domain) end to end with seeded, fully reproducible fault trajectories; measures coverage over the derived
 (error code × recovery action × engine) matrix; judges every run against
 the stack's own contracts (bit-exactness, zero drops, ledger invariants,
 trace causality); and minimizes + promotes every counterexample into the
@@ -14,11 +14,19 @@ from .campaign import CampaignReport, FuzzCampaign, load_entry, minimize, write_
 from .coverage import Cell, CoverageDB, action_ladder, reachable_cells
 from .mutator import FaultMutator
 from .runner import RunResult, run_trajectory
-from .trajectory import ENGINES, GROUP_ENGINE, SINGLE_ENGINES, Op, Trajectory
+from .trajectory import (
+    ENGINES,
+    GROUP_ENGINE,
+    MULTIHOST_ENGINE,
+    SINGLE_ENGINES,
+    Op,
+    Trajectory,
+)
 
 __all__ = [
     "CampaignReport", "FuzzCampaign", "load_entry", "minimize", "write_entry",
     "Cell", "CoverageDB", "action_ladder", "reachable_cells",
     "FaultMutator", "RunResult", "run_trajectory",
-    "ENGINES", "GROUP_ENGINE", "SINGLE_ENGINES", "Op", "Trajectory",
+    "ENGINES", "GROUP_ENGINE", "MULTIHOST_ENGINE", "SINGLE_ENGINES", "Op",
+    "Trajectory",
 ]

@@ -22,7 +22,10 @@ wall clock or global RNG state):
 Explicit caps (not silent): group trajectories carry exactly one ``kill``
 op (sequential multi-kill shrink is out of scope for this corpus), at most
 one ``restart`` and one ``rejoin`` op ride along with it (crash-replay and
-elastic regrow lanes), and at most ``MAX_OPS`` ops ride any trajectory.
+elastic regrow lanes), multihost trajectories carry at most one
+``host_kill`` plus at most one ``host_stop`` (one detection story per run —
+the stop-then-kill interleaving is covered, concurrent multi-host loss is
+not), and at most ``MAX_OPS`` ops ride any trajectory.
 """
 from __future__ import annotations
 
@@ -40,7 +43,15 @@ from .coverage import (
     reachable_cells,
 )
 from .runner import ENGINE_SPECS, GROUP_RANKS
-from .trajectory import ENGINES, GROUP_ENGINE, TP_ENGINES, Op, Trajectory
+from .trajectory import (
+    ENGINES,
+    GROUP_ENGINE,
+    HOST_OPS,
+    MULTIHOST_ENGINE,
+    TP_ENGINES,
+    Op,
+    Trajectory,
+)
 
 MAX_OPS = 6
 NUM_SLOTS = 2                       # every runner kit uses two lanes
@@ -90,6 +101,10 @@ class FaultMutator:
         if engine == GROUP_ENGINE:
             return self._group(rng, note=f"targeted:{code_name}:{action}",
                                want=action)
+        if engine == MULTIHOST_ENGINE:
+            return self._multihost(rng,
+                                   note=f"targeted:{code_name}:{action}",
+                                   want=action)
         base = Trajectory(seed=int(rng.integers(1 << 31)), engine=engine,
                           n_requests=_pick(rng, N_REQUESTS[1:]),
                           prompt_len=_pick(rng, PROMPT_LENS),
@@ -119,6 +134,8 @@ class FaultMutator:
         engine = _pick(rng, self.engines)
         if engine == GROUP_ENGINE:
             return self._group(rng, note="random")
+        if engine == MULTIHOST_ENGINE:
+            return self._multihost(rng, note="random")
         base = Trajectory(seed=int(rng.integers(1 << 31)), engine=engine,
                           n_requests=_pick(rng, N_REQUESTS),
                           prompt_len=_pick(rng, PROMPT_LENS),
@@ -175,6 +192,31 @@ class FaultMutator:
             max_new=_pick(rng, (8, 12) if heavy else MAX_NEWS),
             ops=ops, note=f"{note}:group")
 
+    def _multihost(self, rng: np.random.Generator, *, note: str,
+                   want: Optional[str] = None) -> Trajectory:
+        """One multihost scenario: a SIGKILL'd worker process (the evict
+        lane), a SIGSTOP'd-then-resumed one (the false-positive guard as a
+        coverage target), or both on one run. ``want`` forces the lane a
+        targeted cell needs (``evict`` → host_kill, ``resume`` →
+        host_stop)."""
+        kill = want == "evict" or (want is None and rng.random() < 0.7)
+        stop = want == "resume" or (want is None and rng.random() < 0.4)
+        ops = []
+        if kill:
+            ops.append(Op("host_kill", cycle=int(rng.integers(1, 4)),
+                          slot=int(rng.integers(GROUP_RANKS))))
+        if stop or not ops:
+            ops.append(Op("host_stop", cycle=int(rng.integers(1, 4)),
+                          slot=int(rng.integers(GROUP_RANKS))))
+        # heavy-ish load: the faults fire on retire counts, so the fleet
+        # must still be mid-decode when the scheduled cycle is reached
+        return Trajectory(
+            seed=int(rng.integers(1 << 31)), engine=MULTIHOST_ENGINE,
+            n_requests=_pick(rng, (8, 10, 12)),
+            prompt_len=_pick(rng, PROMPT_LENS),
+            max_new=_pick(rng, (8, 12)),
+            ops=ops, note=f"{note}:multihost")
+
     # ---------------------------------------------------------------- mutate
     def mutate(self, parent: Trajectory,
                rng: np.random.Generator) -> Trajectory:
@@ -186,7 +228,8 @@ class FaultMutator:
         if ops:
             moves += ["drop", "tweak"]
         move = _pick(rng, moves)
-        if move == "add" and traj.engine != GROUP_ENGINE:
+        if move == "add" and traj.engine not in (GROUP_ENGINE,
+                                                 MULTIHOST_ENGINE):
             if len(ops) < MAX_OPS:
                 ops.append(self._random_op(rng, traj.engine))
         elif move == "drop":
@@ -197,7 +240,8 @@ class FaultMutator:
             ops[i] = replace(op, cycle=max(1, op.cycle
                                            + int(rng.integers(-2, 3))),
                              slot=int(rng.integers(
-                                 GROUP_RANKS if op.op == "kill"
+                                 GROUP_RANKS
+                                 if op.op == "kill" or op.op in HOST_OPS
                                  else NUM_SLOTS)))
         else:   # load reshape
             traj = replace(traj, n_requests=_pick(rng, N_REQUESTS),

@@ -60,12 +60,20 @@ from ..serve.config import EngineConfig
 from ..serve.group import ServeGroup
 from ..serve.queue import FAILED, OK, Request
 from ..serve.replica import SERVE_PROBES, Replica
+from ..serve.multihost import MultiHostSupervisor
 from .coverage import Cell
-from .trajectory import GROUP_ENGINE, Op, Trajectory
+from .trajectory import GROUP_ENGINE, MULTIHOST_ENGINE, Op, Trajectory
 
 MODEL = "qwen3-1.7b"      # smoke config: tiny, full-attention → every engine
 MAX_CYCLES = 400          # drive-loop bound: far past any legal run length
 GROUP_RANKS = 3
+
+# multihost lane timing: a short lease so the SIGKILL → evict → re-route
+# round trip stays inside a fuzz run's seconds budget, and a stop pause at
+# half the lease so the resumed worker is *provably* inside the no-evict
+# guarantee (the false-positive guard is an oracle below, not just coverage)
+MULTIHOST_SUSPECT_TIMEOUT = 0.6
+MULTIHOST_STOP_PAUSE = 0.5 * MULTIHOST_SUSPECT_TIMEOUT
 
 
 # --------------------------------------------------------------- engine kits
@@ -327,8 +335,9 @@ def reference_tokens(engine: str, n_requests: int, prompt_len: int,
     bug, not a finding, and raises immediately."""
     traj = Trajectory(seed=0, engine=engine, n_requests=n_requests,
                       prompt_len=prompt_len, max_new=max_new)
-    res = (_run_group if engine == GROUP_ENGINE else _run_single)(
-        traj, reference={}, check=False)
+    runner = {GROUP_ENGINE: _run_group,
+              MULTIHOST_ENGINE: _run_multihost}.get(engine, _run_single)
+    res = runner(traj, reference={}, check=False)
     if set(res.responses) != set(range(n_requests)):
         raise RuntimeError(f"clean {engine} run dropped requests: "
                            f"{sorted(res.responses)}")
@@ -476,9 +485,65 @@ def _run_group(traj: Trajectory, *, reference: dict,
     return res
 
 
+def _run_multihost(traj: Trajectory, *, reference: dict,
+                   check: bool = True) -> RunResult:
+    """Drive the real-process fault domain: 3 sim-backend subprocess workers
+    under the heartbeat supervisor. ``host_kill`` ops SIGKILL a worker once
+    ``cycle`` responses retired fleet-wide; ``host_stop`` ops SIGSTOP one for
+    half the suspect timeout. Extra oracle beyond the shared ones: a stopped
+    worker that was never also killed must NOT be evicted (the detector's
+    slow-but-alive discrimination, asserted on every fuzzed trajectory)."""
+    res = RunResult(trajectory=traj)
+    specs = [FaultSpec(step=op.cycle, kind="host_kill",
+                       rank=op.slot % GROUP_RANKS)
+             for op in traj.ops_of("host_kill")]
+    specs += [FaultSpec(step=op.cycle, kind="host_stop",
+                        rank=op.slot % GROUP_RANKS,
+                        magnitude=MULTIHOST_STOP_PAUSE)
+              for op in traj.ops_of("host_stop")]
+    sup = MultiHostSupervisor(
+        GROUP_RANKS, backend="sim",
+        suspect_timeout=MULTIHOST_SUSPECT_TIMEOUT,
+        heartbeat_interval=0.05, trace=True, timeout=90.0,
+        sim_tokens_per_step=2, sim_step_delay_s=0.01)
+    try:
+        out = sup.serve(_requests(traj),
+                        faults=FaultSchedule(tuple(specs), seed=traj.seed))
+    except Exception as exc:                      # oracle 5: nothing escapes
+        res.violations.append(f"crash: {type(exc).__name__}: {exc}")
+        return res
+    res.responses = dict(out.responses)
+    killed_ranks = {s.rank for s in specs if s.kind == "host_kill"}
+    for rank in out.evicted:
+        if rank not in killed_ranks:
+            res.violations.append(
+                f"false positive: host {rank} evicted but never SIGKILLed "
+                f"(stopped={out.stopped}, detection={out.detection.get(rank)})")
+    if out.evicted:
+        res.cells.add((ErrorCode.RANK_FAILED.name, "evict", traj.engine))
+    if out.resumed:
+        res.cells.add((ErrorCode.STRAGGLER.name, "resume", traj.engine))
+    if specs and killed_ranks and not out.evicted:
+        # the kill fired after the drain (or never) — legal, but the
+        # mutator's timing search wants to know the op was dead code
+        res.summary["kill_noop"] = True
+    if any(s.kind == "host_stop" for s in specs) and not out.stopped:
+        res.summary["stop_noop"] = True
+    if check:
+        _check_outcomes(traj, res.responses, reference, res.violations)
+        res.violations.extend(
+            f"trace: {p}" for p in postmortem.validate(out.trace()))
+    res.summary.setdefault("statuses", {})
+    for r in res.responses.values():
+        res.summary["statuses"][r.status] = (
+            res.summary["statuses"].get(r.status, 0) + 1)
+    return res
+
+
 def run_trajectory(traj: Trajectory) -> RunResult:
     """Run one trajectory end to end and apply every oracle. Never raises on
     a stack failure — crashes become violations (counterexamples)."""
     reference = reference_tokens(traj.engine, *traj.load_key)
-    runner = _run_group if traj.engine == GROUP_ENGINE else _run_single
+    runner = {GROUP_ENGINE: _run_group,
+              MULTIHOST_ENGINE: _run_multihost}.get(traj.engine, _run_single)
     return runner(traj, reference=reference)

@@ -36,6 +36,11 @@ Op timing model (the injection surfaces of DESIGN.md §3.6):
   at round ``cycle`` (the ledger ``joins`` schedule): non-blocking join with
   background state transfer and epoch re-balance. Lands in the post-restart
   incarnation when a ``restart`` op rides the same trajectory.
+* ``host_kill`` / ``host_stop`` — SIGKILL / SIGSTOP(+SIGCONT) worker
+  *process* ``slot`` once ``cycle`` responses have been retired fleet-wide
+  (multihost engine only): the heartbeat detector's suspect → evict ladder,
+  WAL re-route across a real process boundary, and the SIGSTOP
+  slow-but-alive false-positive guard.
 """
 from __future__ import annotations
 
@@ -44,17 +49,24 @@ from dataclasses import asdict, dataclass, field, replace
 from typing import Iterable, Optional, Sequence
 
 OP_KINDS = ("word", "poison", "page_table", "preempt", "kill", "restart",
-            "rejoin")
+            "rejoin", "host_kill", "host_stop")
 
 #: Ops that only make sense on the multi-replica ULFM engine.
 GROUP_OPS = frozenset({"kill", "restart", "rejoin"})
 
+#: Ops that only make sense on the multihost (real OS process) engine —
+#: they signal a worker *process*, there is no thread to signal elsewhere.
+HOST_OPS = frozenset({"host_kill", "host_stop"})
+
 #: Engine variants a trajectory can target. ``group`` is the multi-replica
-#: ULFM engine; the rest are single-replica serving code paths.
+#: ULFM engine; ``multihost`` is the real-process fault domain (subprocess
+#: workers under the heartbeat supervisor); the rest are single-replica
+#: serving code paths.
 SINGLE_ENGINES = ("stepwise", "window", "overlap", "overlap_tp",
                   "overlap_paged", "spec", "spec_paged")
 GROUP_ENGINE = "group"
-ENGINES = SINGLE_ENGINES + (GROUP_ENGINE,)
+MULTIHOST_ENGINE = "multihost"
+ENGINES = SINGLE_ENGINES + (GROUP_ENGINE, MULTIHOST_ENGINE)
 
 #: Tensor-parallel engine variants: their ``word`` ops may carry a ``shard``
 #: target (the injection surface is per-shard — DESIGN §3.8).
@@ -115,7 +127,16 @@ class Trajectory:
         for op in self.ops:
             if not isinstance(op, Op):
                 raise TypeError(f"ops must be Op instances, got {op!r}")
-            if (op.op in GROUP_OPS) != (self.engine == GROUP_ENGINE):
+            if op.op in HOST_OPS:
+                if self.engine != MULTIHOST_ENGINE:
+                    raise ValueError(
+                        f"{op.op!r} op targets a worker process and is only "
+                        "valid on the multihost engine")
+            elif self.engine == MULTIHOST_ENGINE:
+                raise ValueError(
+                    f"{op.op!r} op is not valid on the multihost engine "
+                    f"(host ops only: {sorted(HOST_OPS)})")
+            elif (op.op in GROUP_OPS) != (self.engine == GROUP_ENGINE):
                 raise ValueError(
                     f"{op.op!r} op is "
                     f"{'only' if op.op in GROUP_OPS else 'not'} "

@@ -13,8 +13,10 @@ future fault-injection fuzzer's oracle) wants after a faulted run:
   chain *fault → detection → recovery → re-prefill → first healthy token*.
 * :func:`validate` — the round-trip check the CI trace smoke runs: every
   fault resolves, every traced request reaches exactly one terminal span,
-  every recovery span closes, every kill chains to a shrink, and every
-  elastic rejoin chains to a *completed* state transfer. Returns a list of
+  every recovery span closes, every kill chains to a shrink, every elastic
+  rejoin chains to a *completed* state transfer, and every multihost
+  ``host_evict`` is preceded by a ``host_suspect`` for the same rank and
+  followed by an ``epoch`` whose membership excludes it. Returns a list of
   problems (empty = clean).
 
 Everything here is stdlib-only on plain dicts, so ``scripts/trace_tool.py``
@@ -222,6 +224,29 @@ def validate(trace: dict) -> list[str]:
             problems.append(
                 f"replica {chain['dead_rank']} killed but no survivor "
                 "recorded a ulfm_shrink")
+    # host fault domain (multihost supervisor): an eviction must have been
+    # *detected*, never decreed — a host_evict without a preceding
+    # host_suspect for the same rank means the heartbeat detector was
+    # bypassed (e.g. an EOF shortcut) — and must be followed by an epoch
+    # event whose membership excludes the dead rank (the repair half of the
+    # suspect → evict → shrink contract, DESIGN §3.9)
+    suspects = [(e["ts"], _args(e).get("rank")) for e in evs
+                if e.get("name") == "host_suspect"]
+    epochs = [e for e in evs if e.get("name") == "epoch"]
+    for e in evs:
+        if e.get("name") != "host_evict":
+            continue
+        rank = _args(e).get("rank")
+        if not any(r == rank and ts <= e["ts"] + 1.0 for ts, r in suspects):
+            problems.append(
+                f"host {rank} evicted without a preceding host_suspect "
+                "(eviction must come from the failure detector)")
+        if not any(ep["ts"] >= e["ts"] - 1.0
+                   and rank not in _args(ep).get("members", (rank,))
+                   for ep in epochs):
+            problems.append(
+                f"host {rank} evicted but no subsequent epoch excludes it "
+                "(membership was never repaired)")
     # every rejoin chains to a completed state transfer: a rank may not serve
     # on the widened group without having received the weights + page-pool
     # snapshot first (the background lane must have *finished*, not started)

@@ -32,7 +32,15 @@ request landed on after a ULFM shrink. This module adds that substrate:
   ``complete=True`` on success) for the background weights+page-pool copy
   a joiner receives, ``replica_join`` (span) covering warm-up → transfer →
   first exchange on the widened group, and ``autoscale`` instants for
-  policy-driven grow/shrink decisions).
+  policy-driven grow/shrink decisions; the multihost supervisor adds
+  ``epoch`` instants carrying the agreed member list), and ``host`` (the
+  process-level fault domain of ``repro.serve.multihost``: one
+  ``heartbeat`` span per worker summarising its beat stream on the
+  supervisor lane — ``pid = SUPERVISOR_PID`` — plus ``host_kill`` /
+  ``host_stop`` / ``host_resume`` instants for executed faults and
+  ``host_suspect`` / ``host_suspect_clear`` / ``host_evict`` instants for
+  the failure detector's suspect → evict ladder, each stamped with the
+  observed silence and phi score).
 * Export is plain ``trace_event`` JSON (``{"traceEvents": [...]}``): load it
   in Perfetto / ``chrome://tracing``, or feed it to the post-mortem CLI
   (``scripts/trace_tool.py``) which reconstructs per-request timelines and a

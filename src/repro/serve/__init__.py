@@ -18,6 +18,12 @@ exceptions* at a wait, never deadlocks or aborts — to inference traffic.
 * :class:`ServeGroup` — N replicas over the thread-rank transport; a killed
   replica raises on the survivors via the ULFM protocol, the group shrinks and
   re-routes its in-flight requests.
+* :class:`MultiHostSupervisor` — the same fault contract across real OS
+  processes: localhost subprocess workers (one replica each) under a
+  phi-accrual heartbeat failure detector; a SIGKILL'd worker is detected,
+  mapped to ``RANK_FAILED`` on the survivors, and repaired through the same
+  :func:`agree_round` epoch ladder over a length-prefixed socket transport
+  (DESIGN §3.9).
 * :class:`ServeMetrics` — latency percentiles, tokens/s, fault counters, and
   an ``EventLog`` export matching the training executor's records.
 * Tracing (``repro.obs``) — pass ``tracer=Tracer(...)`` to a replica (or
@@ -26,9 +32,21 @@ exceptions* at a wait, never deadlocks or aborts — to inference traffic.
   (faults → recovery lanes →) terminal response, exported as Perfetto
   ``trace_event`` JSON (DESIGN §3.5).
 """
-from .config import EngineConfig, resolve_engine_config  # noqa: F401
-from .group import GroupResult, RankReport, ServeGroup  # noqa: F401
+from .config import EngineConfig  # noqa: F401
+from .group import (  # noqa: F401
+    AgreeDecision,
+    GroupResult,
+    RankReport,
+    ServeGroup,
+    agree_round,
+)
 from .metrics import FaultRecord, ServeMetrics  # noqa: F401
+from .multihost import (  # noqa: F401
+    MultiHostResult,
+    MultiHostSupervisor,
+    PhiAccrualDetector,
+    sim_tokens,
+)
 from .queue import (  # noqa: F401
     EXPIRED,
     FAILED,

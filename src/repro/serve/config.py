@@ -14,10 +14,9 @@ have been the eleventh copy of the sprawl, so this dataclass collapses it:
   one place, with one message);
 * :meth:`from_flags` subsumes the ``"win=8,spec=1,dlen=3"``-style string
   parsing that benchmarks/CLI entry points used to hand-roll per tool;
-* ``Replica(...)``/``ServeGroup(...)`` take ``config=EngineConfig(...)``;
-  the old keyword arguments still work for one release through
-  :func:`resolve_engine_config` (emitting ``DeprecationWarning``), so
-  downstream callers migrate on their own clock.
+* ``Replica(...)``/``ServeGroup(...)`` take ``config=EngineConfig(...)`` —
+  the sole construction path. (The PR-9 one-release legacy-kwargs shim has
+  been removed; old shape keywords are plain ``TypeError``\\ s now.)
 
 Runtime *wiring* (queues, tracers, shared jitted fns, clocks, injectors)
 deliberately stays out: those are per-instance objects, not engine shape, and
@@ -31,20 +30,8 @@ model/devices in hand — but they are *reached* through exactly one path now.
 """
 from __future__ import annotations
 
-import dataclasses
-import warnings
 from dataclasses import dataclass
 from typing import Optional
-
-#: every legacy keyword that migrated into EngineConfig, in the order the old
-#: Replica/ServeGroup signatures listed them (the deprecation shim accepts
-#: exactly these; anything else is a genuine TypeError).
-LEGACY_ENGINE_KWARGS = (
-    "num_slots", "max_len", "eos_id", "max_request_retries", "window",
-    "donate", "overlap", "prefill_budget", "paged", "page_size",
-    "page_budget", "page_watermark", "speculate", "draft_len", "draft_layers",
-    "tp", "trace", "trace_sample",
-)
 
 
 @dataclass(frozen=True)
@@ -193,33 +180,3 @@ class EngineConfig:
                 kw["paged"] = True
         kw.update(overrides)
         return cls(**kw)
-
-
-def resolve_engine_config(config: Optional[EngineConfig], legacy: dict, *,
-                          owner: str,
-                          defaults: Optional[EngineConfig] = None,
-                          stacklevel: int = 3) -> EngineConfig:
-    """One-release deprecation shim: legacy engine kwargs → EngineConfig.
-
-    ``legacy`` holds only the old-style keywords the caller actually passed
-    (collected via ``**legacy`` in the owner's signature). They still work —
-    applied over ``config`` (or over ``defaults``, the owner's historical
-    default shape) via ``dataclasses.replace``, so mixed call sites behave
-    exactly as before — but each call emits one ``DeprecationWarning`` naming
-    the offending keys and the replacement field spelling. Unknown keys raise
-    ``TypeError`` exactly like a misspelled keyword always did.
-    """
-    base = config if config is not None else (defaults or EngineConfig())
-    if not legacy:
-        return base
-    unknown = [k for k in legacy if k not in LEGACY_ENGINE_KWARGS]
-    if unknown:
-        raise TypeError(
-            f"{owner}() got unexpected keyword argument(s) "
-            f"{sorted(unknown)}")
-    warnings.warn(
-        f"{owner}({', '.join(sorted(legacy))}=...) is deprecated; pass "
-        f"config=EngineConfig({', '.join(sorted(legacy))}=...) instead "
-        "(the old kwargs will be removed next release)",
-        DeprecationWarning, stacklevel=stacklevel)
-    return dataclasses.replace(base, **legacy)

@@ -77,7 +77,7 @@ from ..launch.steps import (
 )
 from ..models import build_model
 from ..obs.trace import NULL_TRACER, Tracer, merge_traces
-from .config import EngineConfig, resolve_engine_config
+from .config import EngineConfig
 from .ledger import GroupLedger, WriteAheadLog
 from .ledger import replay as replay_ledger
 from .metrics import ServeMetrics
@@ -109,6 +109,39 @@ class AutoscalePolicy:
     shrink_idle: int = 6
     cooldown: int = 8
     min_ranks: int = 2
+
+
+@dataclass(frozen=True)
+class AgreeDecision:
+    """Outcome of one agreement round: what a member does with the folded
+    ``[remaining, epoch]`` pair."""
+
+    action: str      # "reconfigure" | "hold" | "close" | "continue"
+    epoch: int       # the epoch to serve under after acting
+
+
+def agree_round(rem: int, agreed: int, my_epoch: int, *,
+                hold_close: bool = False) -> AgreeDecision:
+    """The transport-neutral half of the §3.4 agreement: interpret the
+    emax-folded ``[remaining, epoch]`` pair against this member's epoch.
+
+    Both transports run the exact same ladder — the in-process
+    ``comm.all_reduce`` group and the multihost socket workers (where the
+    supervisor performs the fold in star topology) — so membership semantics
+    cannot drift between fault domains:
+
+    * a newer epoch wins over everything (**reconfigure**: enter it before
+      serving another round);
+    * ``rem == 0`` **close**s the group — unless ``hold_close`` (a pending
+      join or a proposal that landed after this round's fold) asks to spin
+      one more round;
+    * otherwise **continue** serving.
+    """
+    if agreed > my_epoch:
+        return AgreeDecision("reconfigure", agreed)
+    if rem == 0:
+        return AgreeDecision("hold" if hold_close else "close", my_epoch)
+    return AgreeDecision("continue", my_epoch)
 
 
 @dataclass
@@ -188,14 +221,11 @@ class ServeGroup:
                  max_ranks: Optional[int] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
                  transfer_chunks: int = _TRANSFER_CHUNKS,
-                 transfer_pause_s: float = _TRANSFER_PAUSE_S,
-                 **legacy):
+                 transfer_pause_s: float = _TRANSFER_PAUSE_S):
         # engine shape comes in through one validated EngineConfig (the
         # historical group default was num_slots=2, preserved here); group
         # wiring (timeouts, elasticity, transfer shape) stays real keywords.
-        # Old shape kwargs still work for one release via the deprecation shim.
-        config = resolve_engine_config(config, legacy, owner="ServeGroup",
-                                       defaults=EngineConfig(num_slots=2))
+        config = config if config is not None else EngineConfig(num_slots=2)
         self.config = config
         if nranks < 2:
             raise ValueError("a ServeGroup needs >= 2 replicas")
@@ -535,11 +565,23 @@ class ServeGroup:
                         report.events.append(
                             ("reroute", round_i, [r for r, _, _ in moved]))
                     continue
-                if agreed > my_epoch:
-                    # reconfigure: first entrant re-balances untaken work
-                    # over the new member list, everyone re-keys the comm
-                    moved = ledger.enter_epoch(agreed)
-                    members = ledger.members_of(agreed)
+                # hold the final close (serving never stalled — there is
+                # simply nothing left to serve) while either (a) an
+                # operator-scheduled joiner is still warming up /
+                # mid-transfer, so a requested regrow cannot lose the race
+                # against the drain, or (b) a membership proposal landed
+                # *after* this round's exchange read the epoch — closing on
+                # the stale agreement would strand the proposer on a
+                # collective nobody posts
+                decision = agree_round(
+                    rem, agreed, my_epoch,
+                    hold_close=(ledger.has_pending_joins()
+                                or ledger.epoch > agreed))
+                if decision.action == "reconfigure":
+                    # first entrant re-balances untaken work over the new
+                    # member list, everyone re-keys the comm
+                    moved = ledger.enter_epoch(decision.epoch)
+                    members = ledger.members_of(decision.epoch)
                     if tracer.enabled:
                         for rid, old, new in moved:
                             tracer.instant(
@@ -549,25 +591,18 @@ class ServeGroup:
                     if moved:
                         report.events.append(
                             ("rebalance", round_i, [r for r, _, _ in moved]))
-                    report.events.append(("epoch", round_i, agreed))
+                    report.events.append(("epoch", round_i, decision.epoch))
                     if ctx.rank not in members:
                         return report       # our graceful leave is agreed
                     if tuple(sorted(comm.context.members)) != members:
-                        comm = comm.repair(members, ("serve-epoch", agreed))
-                    my_epoch = agreed
+                        comm = comm.repair(members,
+                                           ("serve-epoch", decision.epoch))
+                    my_epoch = decision.epoch
                     continue    # ≥1 exchange on the new epoch before exit
-                if rem == 0:
-                    if ledger.has_pending_joins() or ledger.epoch > agreed:
-                        # hold the final close (serving never stalled — there
-                        # is simply nothing left to serve) while either (a) an
-                        # operator-scheduled joiner is still warming up /
-                        # mid-transfer, so a requested regrow cannot lose the
-                        # race against the drain, or (b) a membership proposal
-                        # landed *after* this round's exchange read the epoch
-                        # — closing on the stale agreement would strand the
-                        # proposer on a collective nobody posts
-                        time.sleep(0.002)
-                        continue
+                if decision.action == "hold":
+                    time.sleep(0.002)
+                    continue
+                if decision.action == "close":
                     ledger.close()
                     return report
             raise RuntimeError(

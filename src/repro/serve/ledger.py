@@ -362,17 +362,21 @@ class GroupLedger:
                              "arrival_t": req.arrival_t,
                              "trace_id": req.trace_id})
 
-    def complete(self, resp: Response) -> None:
+    def complete(self, resp: Response) -> bool:
         """Retire a request. The WAL record is fsync'd *before* the response
-        becomes visible (first terminal answer wins)."""
+        becomes visible (first terminal answer wins). Returns True when the
+        response was newly retired, False for a duplicate — the multihost
+        supervisor acks a worker's ``retire`` only on (or after) the durable
+        first copy, so a re-routed duplicate never double-counts."""
         with self._lock:
             if resp.id in self.responses:
-                return
+                return False
             if self.wal is not None:
                 self.wal.append(response_record(resp))
             self.responses[resp.id] = resp
             if self.wal is not None and self.wal.should_compact():
                 self._compact_locked()
+            return True
 
     def remaining(self) -> int:
         # count ids, don't subtract sizes: a replayed ledger's ``responses``

@@ -84,7 +84,7 @@ from ..launch.steps import (
 )
 from ..models import build_model
 from ..obs.trace import NULL_TRACER, SHARD_TID, Tracer
-from .config import EngineConfig, resolve_engine_config
+from .config import EngineConfig
 from .metrics import ServeMetrics
 from .queue import EXPIRED, FAILED, AdmissionPolicy, Request, RequestQueue, Response
 from .scheduler import ContinuousBatchingScheduler, PageAllocator, PagePoolExhausted
@@ -205,13 +205,11 @@ class Replica:
                  paged_layout: Optional[PagedLayout] = None,
                  tracer: Optional[Tracer] = None,
                  fault_injector: Optional[Callable] = None,
-                 page_debug: Optional[bool] = None,
-                 **legacy):
+                 page_debug: Optional[bool] = None):
         # engine *shape* lives in one validated EngineConfig; runtime wiring
         # (queue, policy, shared jitted fns, tracer, injector, clock) stays as
-        # real keywords. Old shape kwargs still work for one release through
-        # the deprecation shim.
-        config = resolve_engine_config(config, legacy, owner="Replica")
+        # real keywords.
+        config = config if config is not None else EngineConfig()
         self.config = config
         num_slots, max_len = config.num_slots, config.max_len
         window, donate, overlap = config.window, config.donate, config.overlap

@@ -26,7 +26,12 @@ from repro.fuzz import (
     write_entry,
 )
 from repro.fuzz.coverage import PAGED_ENGINES
-from repro.fuzz.trajectory import ENGINES, GROUP_ENGINE, SINGLE_ENGINES
+from repro.fuzz.trajectory import (
+    ENGINES,
+    GROUP_ENGINE,
+    MULTIHOST_ENGINE,
+    SINGLE_ENGINES,
+)
 
 NAN = ErrorCode.NONFINITE_LOSS
 
@@ -81,9 +86,14 @@ class TestCoverage:
                 engine in PAGED_ENGINES)
         assert ("COMM_CORRUPTED", "shrink", GROUP_ENGINE) in cells
         assert ("RANK_FAILED", "reroute", GROUP_ENGINE) in cells
+        # multihost (real OS process) lanes: heartbeat-detected eviction and
+        # the SIGSTOP suspected-then-cleared false-positive guard
+        assert ("RANK_FAILED", "evict", MULTIHOST_ENGINE) in cells
+        assert ("STRAGGLER", "resume", MULTIHOST_ENGINE) in cells
         # hard/attribution-only lanes never appear as injectable cells
         assert not any(c[0] == "DRAFT_REJECT" for c in cells)
-        assert not any(c[0] == "RANK_FAILED" and c[2] != GROUP_ENGINE
+        assert not any(c[0] == "RANK_FAILED"
+                       and c[2] not in (GROUP_ENGINE, MULTIHOST_ENGINE)
                        for c in cells)
 
     def test_action_ladder_replays_the_real_policy(self):

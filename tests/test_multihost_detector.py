@@ -1,0 +1,187 @@
+"""Unit tests for the phi-accrual heartbeat failure detector (DESIGN §3.9).
+
+All under a fake clock — no sleeps, no processes: the detector's ladder
+(healthy → suspect → evictable), the adaptive-vs-hard threshold split, the
+SIGSTOP slow-but-alive discrimination and the latency bound are pure
+functions of beat timestamps.
+"""
+import pytest
+
+from repro.serve import PhiAccrualDetector
+
+HB = 0.05
+TIMEOUT = 1.0
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def make(**kw):
+    clock = FakeClock()
+    kw.setdefault("suspect_timeout", TIMEOUT)
+    kw.setdefault("heartbeat_interval", HB)
+    det = PhiAccrualDetector(clock=clock, **kw)
+    return det, clock
+
+
+def beat_regularly(det, clock, rank, n, interval=HB):
+    for _ in range(n):
+        clock.advance(interval)
+        det.heartbeat(rank)
+
+
+# --------------------------------------------------------------- validation
+@pytest.mark.parametrize("kw", [
+    dict(suspect_timeout=0.0),
+    dict(suspect_timeout=-1.0),
+    dict(heartbeat_interval=0.0),
+    dict(heartbeat_interval=2.0),          # >= suspect_timeout
+    dict(evict_factor=1.0),                # no SIGSTOP margin
+    dict(evict_factor=2.5),                # breaks the 2x latency bound
+    dict(phi_threshold=0.0),
+])
+def test_parameter_validation(kw):
+    with pytest.raises(ValueError):
+        make(**kw)
+
+
+def test_register_remove_bookkeeping():
+    det, clock = make()
+    det.register(0)
+    det.register(1)
+    assert det.ranks() == [0, 1]
+    det.remove(0)
+    assert det.ranks() == [1]
+    # beats from an unknown rank are ignored, never KeyError
+    assert det.heartbeat(7) is False
+    assert det.poll() == ([], [])
+
+
+# ------------------------------------------------------- suspect/evict ladder
+def test_healthy_host_is_never_suspected():
+    det, clock = make()
+    det.register(0)
+    for _ in range(200):
+        clock.advance(HB)
+        det.heartbeat(0)
+        newly, evictable = det.poll()
+        assert not newly and not evictable
+    assert not det.is_suspect(0)
+
+
+def test_hard_timeout_suspects_then_evicts_within_bound():
+    det, clock = make(evict_factor=1.8)
+    det.register(0)
+    # noisy-but-alive history: wide inter-arrival spread keeps phi low, so
+    # only the hard suspect_timeout bound can fire
+    for k in range(40):
+        clock.advance(HB if k % 2 else 8 * HB)
+        det.heartbeat(0)
+    silent_from = clock.t
+    # just short of the hard bound: not suspect (phi stays under threshold)
+    clock.advance(0.95 * TIMEOUT)
+    newly, evictable = det.poll()
+    assert newly == [] and evictable == []
+    # crossing it: suspect, but not yet evictable (the SIGSTOP margin)
+    clock.advance(0.06 * TIMEOUT)
+    newly, evictable = det.poll()
+    assert newly == [0] and evictable == []
+    assert det.is_suspect(0)
+    # suspicion is entered once per silent stretch
+    clock.advance(0.01)
+    newly, _ = det.poll()
+    assert newly == []
+    # evictable at evict_factor x suspect_timeout — within the 2x bound
+    clock.advance(1.8 * TIMEOUT - (clock.t - silent_from) + 0.01)
+    newly, evictable = det.poll()
+    assert evictable == [0]
+    assert clock.t - silent_from <= 2 * TIMEOUT
+
+
+def test_adaptive_threshold_fires_early_for_tight_beats_only():
+    """The phi path: a host with a tight, regular beat history is suspected
+    well before the hard timeout; a noisy host with the SAME silence is not
+    (the adaptive threshold is per-host history, not a global constant)."""
+    det, clock = make()
+    det.register(0)    # tight: every beat exactly on the interval
+    det.register(1)    # noisy: wildly irregular gaps (1 / 6 / 10 intervals)
+    for k in range(120):
+        clock.advance(HB)
+        det.heartbeat(0)
+        if k % 17 in (0, 1, 7):
+            det.heartbeat(1)
+    # half the hard timeout of silence: far beyond rank 0's observed spread,
+    # unremarkable for rank 1
+    clock.advance(0.5 * TIMEOUT)
+    newly, evictable = det.poll()
+    assert 0 in newly, "tight-beat host not adaptively suspected"
+    assert 1 not in newly, "noisy host suspected below the hard timeout"
+    assert evictable == []
+    assert det.phi(0) > det.phi(1)
+
+
+def test_one_late_beat_is_never_suspicious():
+    """The two-interval grace floor: a single missed beat (silence just past
+    one interval) must not trip the adaptive path even with a perfectly
+    regular history."""
+    det, clock = make()
+    det.register(0)
+    beat_regularly(det, clock, 0, 60)
+    clock.advance(1.9 * HB)      # under the 2x heartbeat_interval floor
+    newly, _ = det.poll()
+    assert newly == []
+
+
+# --------------------------------------------------------- SIGSTOP guard
+def test_stopped_then_resumed_host_is_cleared_not_evicted():
+    """A SIGSTOP'd worker resumed within suspect_timeout: suspicion is
+    entered during the gap, the first post-resume beat clears it
+    (heartbeat() -> True), and the host is never evictable."""
+    det, clock = make(evict_factor=1.8)
+    det.register(0)
+    beat_regularly(det, clock, 0, 60)
+    # paused for 90% of the hard bound: suspected (adaptive), never evictable
+    clock.advance(0.9 * TIMEOUT)
+    newly, evictable = det.poll()
+    assert newly == [0] and evictable == []
+    # resume: the late beat clears the suspicion and re-arms detection
+    assert det.heartbeat(0) is True
+    assert not det.is_suspect(0)
+    newly, evictable = det.poll()
+    assert newly == [] and evictable == []
+    # healthy afterwards — the stale gap in the history must not wedge the
+    # detector into either permanent suspicion or permanent immunity
+    beat_regularly(det, clock, 0, 60)
+    assert det.poll() == ([], [])
+    clock.advance(2.1 * TIMEOUT)
+    newly, evictable = det.poll()
+    assert newly == [0] and evictable == [0]
+
+
+def test_clearing_beat_rearms_eviction_clock():
+    """Eviction needs a *fresh* suspect stretch after a clear: the silence
+    accumulated before a resume never counts toward evict_after."""
+    det, clock = make(evict_factor=1.8)
+    det.register(0)
+    beat_regularly(det, clock, 0, 40)
+    clock.advance(0.95 * TIMEOUT)
+    det.poll()
+    assert det.heartbeat(0) is True      # resumed just in time
+    resumed_at = clock.t
+    clock.advance(1.0 * TIMEOUT)         # silent again, from scratch
+    newly, evictable = det.poll()
+    assert det.is_suspect(0)
+    assert evictable == [], (
+        "pre-resume silence leaked into the eviction clock")
+    clock.advance(1.8 * TIMEOUT - (clock.t - resumed_at) + 0.01)
+    _, evictable = det.poll()
+    assert evictable == [0]

@@ -23,7 +23,6 @@ from repro.serve import (
     RequestQueue,
     ServeGroup,
 )
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 
@@ -139,7 +138,7 @@ def serve_env():
 
 def _replica(env, **kw):
     cfg, params, decode_fn, prefill_fn = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", 48)
     return Replica(cfg, params=params, config=EngineConfig(**conf),

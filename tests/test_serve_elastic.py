@@ -111,6 +111,107 @@ class TestWriteAheadLog:
         assert rep.members == (0, 1)
 
 
+# --------------------------------------------- torn epoch transitions
+class TestTornEpochTransition:
+    """A supervisor/fleet crash *during* an epoch transition (the multihost
+    supervisor's eviction path and the thread-rank shrink both drive it):
+    ``on_death`` appends the shrink's epoch record first, then one route
+    record per re-routed request — so a crash can tear the log mid-epoch
+    (the transition never happened) or mid-route (the transition happened,
+    a re-route didn't). Replay must come back to a consistent membership +
+    outstanding set at BOTH tear points, and a restarted group must serve
+    the replayed backlog to completion, bit-exact."""
+
+    N = 9
+
+    def _mid_transition_wal(self, tmp_path, retire=()):
+        path = str(tmp_path / "ledger.wal")
+        led = GroupLedger([_req(i) for i in range(self.N)], ranks=(0, 1, 2),
+                          wal=WriteAheadLog(path))
+        for rank in (0, 1, 2):
+            led.take(rank)
+        for rid in retire:
+            led.complete(Response(id=rid, status=OK, tokens=(1, 2),
+                                  replica=rid % 3))
+        moved = led.on_death([2])
+        assert moved, "the dead rank had nothing outstanding"
+        led.wal.close()
+        return path, moved
+
+    @staticmethod
+    def _lines(path):
+        with open(path, "rb") as f:
+            return f.read().splitlines(keepends=True)
+
+    @staticmethod
+    def _tear_into(path, lines, idx):
+        """Crash artefact: everything before line ``idx`` is intact, line
+        ``idx`` was mid-write (half its bytes), everything after is gone."""
+        with open(path, "wb") as f:
+            f.writelines(lines[:idx])
+            f.write(lines[idx][:max(len(lines[idx]) // 2, 1)])
+
+    def _last_epoch_idx(self, lines):
+        return max(i for i, ln in enumerate(lines)
+                   if b'"kind":"epoch"' in ln)
+
+    def test_torn_epoch_record_replays_pre_transition_membership(
+            self, tmp_path):
+        path, _ = self._mid_transition_wal(tmp_path, retire=(0, 1))
+        lines = self._lines(path)
+        self._tear_into(path, lines, self._last_epoch_idx(lines))
+        rep = replay(path)
+        assert rep.torn == 1
+        # the transition never happened: epoch 0, full membership, and the
+        # dead rank still owns its share on the record — the restart will
+        # re-run the shrink, not trust a half-written one
+        assert rep.epoch == 0
+        assert rep.members == (0, 1, 2)
+        assert sorted(rep.responses) == [0, 1]
+        assert [r.id for r in rep.outstanding()] == [
+            i for i in range(self.N) if i not in (0, 1)]
+        assert any(rank == 2 for rank in rep.routes.values())
+
+    def test_torn_route_record_keeps_membership_and_outstanding_set(
+            self, tmp_path):
+        path, moved = self._mid_transition_wal(tmp_path, retire=(0, 1))
+        lines = self._lines(path)
+        epoch_idx = self._last_epoch_idx(lines)
+        route_idx = next(i for i in range(epoch_idx + 1, len(lines))
+                         if b'"kind":"route"' in lines[i])
+        self._tear_into(path, lines, route_idx)
+        rep = replay(path)
+        assert rep.torn == 1
+        # the transition DID happen (its record was fsync'd before any
+        # route): shrunk membership replays...
+        assert rep.epoch == 1
+        assert rep.members == (0, 1)
+        # ...and the torn re-route is discarded, never half-applied: the
+        # moved requests' last recorded owner is still the dead rank, but
+        # every one of them is in the outstanding set — membership and the
+        # re-submission set stay consistent, nothing is dropped
+        moved_ids = sorted(rid for rid, _, _ in moved)
+        assert all(rep.routes[rid] == 2 for rid in moved_ids)
+        outstanding = {r.id for r in rep.outstanding()}
+        assert set(moved_ids) <= outstanding
+        assert outstanding == {i for i in range(self.N) if i not in (0, 1)}
+
+    def test_restart_from_torn_transition_serves_to_completion(
+            self, group, tmp_path):
+        clean = group.serve([_req(i) for i in range(self.N)])
+        assert all(r.ok for r in clean.responses.values())
+        path, _ = self._mid_transition_wal(tmp_path)     # nothing retired
+        lines = self._lines(path)
+        self._tear_into(path, lines, self._last_epoch_idx(lines))
+        r2 = group.serve_from_ledger(path)
+        assert sorted(r2.responses) == list(range(self.N)), (
+            "requests dropped across the torn epoch transition")
+        assert all(r.ok for r in r2.responses.values())
+        for rid, resp in r2.responses.items():
+            assert tuple(resp.tokens) == tuple(clean.responses[rid].tokens), (
+                f"request {rid} diverged after the torn-transition replay")
+
+
 # ------------------------------------------------------- requeue ordering
 class TestRequeueOrdering:
     def test_ahead_of_class_across_repeated_cycles(self):

@@ -33,7 +33,6 @@ from repro.serve import (
     Request,
     RequestQueue,
 )
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 64
@@ -48,7 +47,7 @@ def env():
 
 def _replica(env, window, **kw):
     cfg, params = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", MAX_LEN)
     return Replica(cfg, params=params,

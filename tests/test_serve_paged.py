@@ -27,7 +27,6 @@ from repro.launch.paging import PagedLayout, pages_for
 from repro.launch.steps import make_cache_prefill, make_chunked_prefill
 from repro.models import build_model
 from repro.serve import OK, EngineConfig, Replica, Request
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 32
@@ -44,7 +43,7 @@ def env():
 
 def _replica(env, *, paged, **kw):
     cfg, params = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", MAX_LEN)
     conf.setdefault("window", WINDOW)

@@ -18,7 +18,6 @@ from repro.core.errors import ATTRIBUTION_ONLY, ErrorCode
 from repro.launch.steps import PerfOptions, make_speculative_decode_window
 from repro.models import build_model
 from repro.serve import EXPIRED, OK, EngineConfig, Replica, Request, ServeGroup
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import make_window_enum_fn
 
 MAX_LEN = 64
@@ -35,7 +34,7 @@ def env():
 
 def _replica(env, *, speculate, **kw):
     cfg, params = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", MAX_LEN)
     conf.setdefault("max_request_retries", 6)

@@ -258,20 +258,22 @@ class TestEngineConfig:
         with pytest.raises(ValueError, match="unknown engine flag"):
             EngineConfig.from_flags("wnidow=8")
 
-    def test_legacy_kwargs_deprecated_but_working(self, env):
+    def test_legacy_kwargs_are_hard_type_errors(self, env):
+        # the one-release deprecation shim is gone: engine-shape kwargs on
+        # the owners are plain TypeErrors now — config=EngineConfig(...) is
+        # the only construction path
         cfg, params = env
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            rep = Replica(cfg, params=params, num_slots=2, max_len=32,
-                          window=4)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        with pytest.raises(TypeError, match="num_slots"):
+            Replica(cfg, params=params, num_slots=2, max_len=32, window=4)
+        with pytest.raises(TypeError, match="max_len"):
+            ServeGroup(cfg, 2, max_len=32)
+        # no DeprecationWarning path remains anywhere in construction
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            rep = Replica(cfg, params=params,
+                          config=EngineConfig(num_slots=2, max_len=32,
+                                              window=4))
         assert rep.config.window == 4 and rep.config.num_slots == 2
-        # a ServeGroup keeps its historical num_slots=2 default
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            g = ServeGroup(cfg, 2, max_len=32)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-        assert g.config.num_slots == 2 and g.config.max_len == 32
 
     def test_unknown_kwarg_still_a_type_error(self, env):
         cfg, params = env

@@ -30,7 +30,6 @@ from repro.serve import (
     ServeGroup,
     ServeMetrics,
 )
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 
 MAX_LEN = 64
 
@@ -44,7 +43,7 @@ def env():
 
 def _replica(env, tracer, **kw):
     cfg, params = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", MAX_LEN)
     conf.setdefault("window", 4)

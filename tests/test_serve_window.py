@@ -14,7 +14,6 @@ from repro.core.errors import ErrorCode
 from repro.launch.steps import PerfOptions, make_cache_prefill
 from repro.models import build_model
 from repro.serve import FAILED, OK, EngineConfig, Replica, Request, ServeGroup
-from repro.serve.config import LEGACY_ENGINE_KWARGS
 from repro.serve.replica import SERVE_PROBES
 
 MAX_LEN = 64
@@ -29,7 +28,7 @@ def env():
 
 def _replica(env, window, **kw):
     cfg, params = env
-    conf = {k: kw.pop(k) for k in list(kw) if k in LEGACY_ENGINE_KWARGS}
+    conf = {k: kw.pop(k) for k in list(kw) if k in EngineConfig.__dataclass_fields__}
     conf.setdefault("num_slots", 2)
     conf.setdefault("max_len", MAX_LEN)
     return Replica(cfg, params=params,
